@@ -1,0 +1,30 @@
+"""Emit the §Perf exact-compile cross-check table from artifacts/exact."""
+
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.roofline import HBM_BW, ICI_BW_PER_LINK, ICI_LINKS_USED, PEAK_FLOPS_BF16
+
+
+def main(art_dir="artifacts/exact"):
+    print("| cell | variant | flops/chip | t_comp | t_mem (fused) | "
+          "t_coll | bound |")
+    print("|---|---|---|---|---|---|---|")
+    for p in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        a = json.load(open(p))
+        tc = a["flops_per_device"] / PEAK_FLOPS_BF16
+        tm = a["bytes_per_device"] / HBM_BW
+        tl = sum(a["collectives"].values()) / (ICI_LINKS_USED * ICI_BW_PER_LINK)
+        bound = max(("compute", tc), ("memory", tm), ("collective", tl),
+                    key=lambda kv: kv[1])[0]
+        print(f"| {a['arch']} {a['shape']} | {a['variant']} | "
+              f"{a['flops_per_device']:.3e} | {tc:.2f} | {tm:.2f} | "
+              f"{tl:.2f} | {bound} |")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

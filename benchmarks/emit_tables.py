@@ -1,0 +1,65 @@
+"""Emit EXPERIMENTS.md markdown tables from the dry-run artifacts."""
+
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.config import SHAPES
+from repro.configs import ARCHS
+from repro.launch.roofline import terms_from_artifact
+
+
+def fmt(x, unit=""):
+    if x == 0:
+        return "0"
+    for scale, suffix in [(1e12, "T"), (1e9, "G"), (1e6, "M"), (1e3, "k")]:
+        if abs(x) >= scale:
+            return f"{x/scale:.2f}{suffix}{unit}"
+    return f"{x:.3g}{unit}"
+
+
+def main(art_dir="artifacts/dryrun"):
+    arts = []
+    for p in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        a = json.load(open(p))
+        if a.get("variant", "baseline") == "baseline":
+            arts.append(a)
+
+    print("### Dry-run table (every arch x shape x mesh)\n")
+    print("| arch | shape | mesh | status | kind | compile s | "
+          "flops/chip | bytes/chip | coll B/chip | temp GB/chip |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    order = {a: i for i, a in enumerate(ARCHS)}
+    arts.sort(key=lambda a: (order.get(a["arch"], 99), a["shape"],
+                             a["mesh"] != "single"))
+    for a in arts:
+        if a.get("status") == "ok":
+            coll = sum(a["collectives"].values())
+            print(f"| {a['arch']} | {a['shape']} | {a['mesh']} | ok | "
+                  f"{a.get('kind','')} | {a.get('compile_s','')} | "
+                  f"{fmt(a['flops_per_device'])} | "
+                  f"{fmt(a['bytes_per_device'])} | {fmt(coll)} | "
+                  f"{a['memory'].get('temp_per_device',0)/1e9:.2f} |")
+        else:
+            print(f"| {a['arch']} | {a['shape']} | {a['mesh']} | "
+                  f"{a.get('status')} | | | | | | |")
+
+    print("\n### Roofline table\n")
+    print("| arch | shape | mesh | t_compute s | t_memory s | "
+          "t_collective s | bound | MODEL/HLO flops | roofline frac |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for a in arts:
+        if a.get("status") != "ok":
+            continue
+        t = terms_from_artifact(a, ARCHS[a["arch"]], SHAPES[a["shape"]])
+        print(f"| {a['arch']} | {a['shape']} | {a['mesh']} | "
+              f"{t.t_compute:.2e} | {t.t_memory:.2e} | "
+              f"{t.t_collective:.2e} | **{t.bound}** | "
+              f"{t.useful_flops_ratio:.1%} | {t.roofline_fraction:.2%} |")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

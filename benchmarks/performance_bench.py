@@ -1,0 +1,87 @@
+"""Paper §IV performance experiment: ad hoc cloud vs dedicated instance.
+
+The paper compares job execution time on the ad hoc cloud against an
+Amazon EC2 instance "with similar resources", with 0, 1 and multiple
+guest failures, concluding the overheads are comparable. We reproduce the
+table: makespan of a fixed workload on
+
+- a **dedicated host** (no failures, no ad hoc overheads) — the EC2 stand-in,
+- the **ad hoc cloud** with 0 / 1 / 3 injected failures,
+
+reporting the overhead ratio. Overheads modeled: snapshot pauses (the VM
+pause while the snapshot is captured), restore latency (failure detection
+by the 2-minute rule + snapshot transfer) and lost work since the last
+snapshot.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.cloud import AdHocCloudSim, SimParams
+from repro.core.events import constant_failure_trace
+
+WORK = 1800.0           # a 30-minute job
+
+
+def dedicated_makespan() -> float:
+    """No failures, no snapshots: pure work time (the EC2 baseline, minus
+    its own provisioning overheads which the paper also discounts)."""
+    return WORK
+
+
+def adhoc_makespan(n_failures: int, seed: int = 0) -> dict:
+    p = SimParams(
+        n_hosts=6, seed=seed, continuity=True,
+        snapshot_interval_s=120.0, snapshot_overhead_s=2.0,
+    )
+    sim = AdHocCloudSim(p)
+    if n_failures:
+        # fail the job's host at evenly spaced points; it recovers later
+        times = [600.0 * (i + 1) for i in range(n_failures)]
+        # the scheduler starts the job on the most reliable host, host000
+        sim.apply_trace(constant_failure_trace(
+            sim.host_ids, {"host000": times[:1]}, 3 * 3600.0,
+            recovery=900.0,
+        ))
+        if n_failures > 1:
+            sim.apply_trace(constant_failure_trace(
+                sim.host_ids,
+                {f"host{i:03d}": [times[i]] for i in range(1, n_failures)},
+                3 * 3600.0, recovery=900.0,
+            ))
+    sim.submit(work_units=WORK, n_jobs=1)
+    stats = sim.run_until_settled(4 * 3600.0)
+    return stats
+
+
+def main(rows=None) -> list[dict]:
+    rows = rows if rows is not None else []
+    base = dedicated_makespan()
+    print(f"performance vs dedicated (job = {WORK / 60:.0f} min of work)")
+    print(f"{'scenario':>22} {'makespan':>10} {'overhead':>9} "
+          f"{'restores':>9}")
+    print(f"{'dedicated (EC2-like)':>22} {base:>9.0f}s {'—':>9} {'—':>9}")
+    for n_fail in (0, 1, 3):
+        stats = adhoc_makespan(n_fail)
+        mk = stats["max_makespan"]
+        row = {
+            "bench": "performance",
+            "scenario": f"adhoc_{n_fail}_failures",
+            "makespan_s": mk,
+            "overhead_ratio": mk / base,
+            "restores": stats["restores"],
+            "completed": stats["completed"],
+        }
+        rows.append(row)
+        print(f"{'ad hoc, ' + str(n_fail) + ' failures':>22} "
+              f"{mk:>9.0f}s {mk / base:>8.2f}x "
+              f"{stats['restores']:>9.0f}")
+    print("\npaper's claim: comparable performance even with failures "
+          "(overhead from snapshots ~per-interval pause + per-failure "
+          "detection/restore latency)")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

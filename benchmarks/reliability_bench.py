@@ -1,0 +1,92 @@
+"""Paper §IV reliability experiment: 30-host failure-trace replay.
+
+Reproduces the design of the paper's evaluation: a 30-node cluster
+replays an hour of (Nagios-style) host activity while a batch of cloud
+jobs runs. We measure the completion rate within the window for
+
+- the **ad hoc cloud** (reliability scheduling + P2P snapshots + restore),
+- the **BOINC baseline** (failed tasks restart from scratch),
+
+across several failure intensities. The paper reports up to 93.3%
+reliability for its prototype on the most active hour; the harness prints
+the same metric (plus restore/restart counts the paper discusses
+qualitatively).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.cloud import AdHocCloudSim, SimParams
+from repro.core.events import nagios_like_trace
+
+HOUR = 3600.0
+
+
+def run_once(
+    *,
+    n_hosts: int = 30,
+    continuity: bool,
+    seed: int,
+    mean_uptime: float,
+    n_jobs: int = 30,
+    work_units: float = 1500.0,
+    horizon: float = HOUR,
+) -> dict:
+    """One replay: jobs submitted at t=0, measured at the horizon."""
+    p = SimParams(
+        n_hosts=n_hosts,
+        seed=seed,
+        continuity=continuity,
+        snapshot_interval_s=120.0,
+        snapshot_overhead_s=2.0,
+        guest_fail_per_hour=0.2,
+    )
+    sim = AdHocCloudSim(p)
+    sim.apply_trace(nagios_like_trace(
+        n_hosts, horizon, seed=seed + 1000,
+        mean_uptime=mean_uptime, mean_downtime=180.0,
+    ))
+    sim.submit(work_units=work_units, n_jobs=n_jobs)
+    return sim.run(horizon)
+
+
+def main(rows=None) -> list[dict]:
+    rows = rows if rows is not None else []
+    print("reliability replay (30 hosts, 1h window, 30 jobs x 25 min)")
+    print(f"{'uptime':>8} {'mode':>10} {'completed':>10} {'rate':>7} "
+          f"{'restores':>9} {'restarts':>9}")
+    for mean_uptime, label in [
+        (5400.0, "calm"), (2700.0, "active"), (1350.0, "hostile")
+    ]:
+        for continuity in (True, False):
+            rates, restores, restarts = [], [], []
+            for seed in range(3):
+                s = run_once(continuity=continuity, seed=seed,
+                             mean_uptime=mean_uptime)
+                rates.append(s["completion_rate"])
+                restores.append(s["restores"])
+                restarts.append(s["restarts_from_zero"])
+            mode = "adhoc" if continuity else "boinc"
+            rate = float(np.mean(rates))
+            row = {
+                "bench": "reliability",
+                "trace": label,
+                "mode": mode,
+                "completion_rate": rate,
+                "restores": float(np.mean(restores)),
+                "restarts": float(np.mean(restarts)),
+            }
+            rows.append(row)
+            print(f"{label:>8} {mode:>10} "
+                  f"{rate * 30:>10.1f} {rate:>7.1%} "
+                  f"{row['restores']:>9.1f} {row['restarts']:>9.1f}")
+    adhoc = [r for r in rows if r["mode"] == "adhoc"]
+    worst = min(r["completion_rate"] for r in adhoc)
+    print(f"\nad hoc worst-case completion rate: {worst:.1%} "
+          f"(paper prototype: 93.3%)")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,84 @@
+"""Roofline table from the dry-run artifacts (deliverable g).
+
+Reads ``artifacts/dryrun/*.json`` and prints, per (arch × shape × mesh):
+the three roofline terms in seconds, the dominant bound, MODEL_FLOPS /
+HLO_FLOPs, and the roofline fraction. Baselines for every cell; the three
+hillclimbed cells are tracked in EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.config import SHAPES
+from repro.configs import ARCHS
+from repro.launch.roofline import terms_from_artifact
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def load_artifacts(art_dir: str = ART_DIR) -> list[dict]:
+    arts = []
+    for path in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        with open(path) as f:
+            arts.append(json.load(f))
+    return arts
+
+
+def main(rows=None, art_dir: str = ART_DIR) -> list[dict]:
+    rows = rows if rows is not None else []
+    arts = load_artifacts(art_dir)
+    if not arts:
+        print(f"no dry-run artifacts under {art_dir}; "
+              f"run: PYTHONPATH=src python -m repro.launch.dryrun")
+        return rows
+    variants = [a for a in arts
+                if a.get("status") == "ok"
+                and a.get("variant", "baseline") != "baseline"]
+    arts = [a for a in arts if a.get("variant", "baseline") == "baseline"]
+    ok = [a for a in arts if a.get("status") == "ok"]
+    skipped = [a for a in arts if a.get("status") == "skipped"]
+    errors = [a for a in arts if a.get("status") == "error"]
+    print(f"dry-run artifacts: {len(ok)} ok / {len(skipped)} skipped / "
+          f"{len(errors)} errors")
+    hdr = (f"{'arch':24s} {'shape':12s} {'mesh':6s} "
+           f"{'t_comp':>9} {'t_mem':>9} {'t_coll':>9} {'bound':>10} "
+           f"{'use%':>6} {'roof%':>6}")
+    print(hdr)
+    print("-" * len(hdr))
+    for a in ok:
+        cfg = ARCHS[a["arch"]]
+        shape = SHAPES[a["shape"]]
+        t = terms_from_artifact(a, cfg, shape)
+        row = {"bench": "roofline", **t.to_dict()}
+        rows.append(row)
+        print(f"{a['arch']:24s} {a['shape']:12s} {a['mesh']:6s} "
+              f"{t.t_compute:>9.2e} {t.t_memory:>9.2e} "
+              f"{t.t_collective:>9.2e} {t.bound:>10s} "
+              f"{t.useful_flops_ratio:>6.1%} {t.roofline_fraction:>6.1%}")
+    for a in skipped:
+        print(f"{a['arch']:24s} {a['shape']:12s} {a['mesh']:6s} "
+              f"{'SKIP':>9} ({a.get('reason', '')[:40]})")
+    for a in errors:
+        print(f"{a['arch']:24s} {a['shape']:12s} {a['mesh']:6s} "
+              f"{'ERROR':>9} ({a.get('error', '')[:60]})")
+    if variants:
+        print("\nhillclimb variants (EXPERIMENTS.md §Perf):")
+        for a in variants:
+            cfg = ARCHS[a["arch"]]
+            shape = SHAPES[a["shape"]]
+            t = terms_from_artifact(a, cfg, shape)
+            rows.append({"bench": "roofline_variant",
+                         "variant": a["variant"], **t.to_dict()})
+            print(f"{a['arch']:24s} {a['shape']:12s} "
+                  f"{a['variant'][:34]:34s} "
+                  f"{t.t_compute:>9.2e} {t.t_memory:>9.2e} "
+                  f"{t.t_collective:>9.2e} {t.bound:>10s} "
+                  f"{t.roofline_fraction:>6.1%}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

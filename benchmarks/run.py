@@ -1,0 +1,65 @@
+"""Benchmark entry point: one section per paper table/figure + the
+framework's own performance tables.
+
+    PYTHONPATH=src python -m benchmarks.run [--only NAME] [--csv PATH]
+
+Sections:
+- reliability  — paper §IV completion-rate replay (30 hosts, traces)
+- performance  — paper §IV ad hoc vs dedicated makespan
+- snapshot     — §III-D placement quality + snapshot costs
+- straggler    — interference mitigation (low-interference rule)
+- kernel       — kernel micro-benchmarks
+- roofline     — per-cell roofline terms from dry-run artifacts
+"""
+
+import argparse
+import csv
+import sys
+
+
+SECTIONS = ["reliability", "performance", "snapshot", "straggler",
+            "kernel", "roofline"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, choices=SECTIONS)
+    ap.add_argument("--csv", default=None)
+    args = ap.parse_args()
+
+    rows: list[dict] = []
+    sections = [args.only] if args.only else SECTIONS
+    for name in sections:
+        print("\n" + "=" * 72)
+        print(f"== {name}")
+        print("=" * 72)
+        try:
+            if name == "reliability":
+                from benchmarks import reliability_bench as m
+            elif name == "performance":
+                from benchmarks import performance_bench as m
+            elif name == "snapshot":
+                from benchmarks import snapshot_bench as m
+            elif name == "straggler":
+                from benchmarks import straggler_bench as m
+            elif name == "kernel":
+                from benchmarks import kernel_bench as m
+            elif name == "roofline":
+                from benchmarks import roofline_bench as m
+            m.main(rows)
+        except Exception as e:  # keep the harness running
+            print(f"SECTION FAILED: {name}: {type(e).__name__}: {e}")
+            import traceback
+            traceback.print_exc()
+
+    if args.csv:
+        keys = sorted({k for r in rows for k in r})
+        with open(args.csv, "w", newline="") as f:
+            w = csv.DictWriter(f, fieldnames=keys)
+            w.writeheader()
+            w.writerows(rows)
+        print(f"\nwrote {len(rows)} rows to {args.csv}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Serving on the ad hoc cloud: a batched inference guest survives a host
+failure mid-generation and resumes on a substitute host with identical
+outputs (greedy decoding + snapshot continuity).
+
+    PYTHONPATH=src python examples/adhoc_serving.py
+"""
+
+import jax
+import numpy as np
+
+from repro.configs import REDUCED
+from repro.models import get_model
+from repro.serving.engine import ServeEngine
+
+ARCH = "qwen3-8b"
+cfg = REDUCED[ARCH]
+model = get_model(cfg)
+params = model.init(jax.random.key(0))
+rng = np.random.default_rng(0)
+prompts = [rng.integers(1, cfg.vocab_size, 8).tolist() for _ in range(6)]
+
+# --- reference: uninterrupted serving on a reliable host -----------------
+ref = ServeEngine(model, params, n_slots=3, max_seq=128)
+for p in prompts:
+    ref.submit(p, max_new_tokens=10)
+ref_done = sorted(ref.run(), key=lambda r: r.req_id)
+print(f"reference host served {len(ref_done)} requests")
+
+# --- ad hoc host: dies after 4 engine steps -------------------------------
+engine = ServeEngine(model, params, n_slots=3, max_seq=128)
+for p in prompts:
+    engine.submit(p, max_new_tokens=10)
+for _ in range(4):
+    engine.step()
+print("host failure! latest P2P snapshot restored on a peer "
+      "(paper §III-D)...")
+snapshot = engine.snapshot()          # this is what peers already hold
+
+substitute = ServeEngine(model, params, n_slots=3, max_seq=128)
+substitute.restore(snapshot)
+done = sorted(substitute.run(), key=lambda r: r.req_id)
+
+match = all(a.generated == b.generated for a, b in zip(ref_done, done))
+for r in done[:3]:
+    print(f"  req {r.req_id}: {r.prompt[:3]}... -> {r.generated}")
+print(f"\nall {len(done)} continuations identical to the "
+      f"failure-free host: {match}")
+assert match

@@ -1,0 +1,9 @@
+"""repro: ad hoc cloud computing (McGilvary et al., 2015) as a JAX framework.
+
+The package realizes the paper's ad hoc cloud — reliability scheduling, P2P
+snapshot continuity, availability checking, cloudlets, server-controlled
+clients — as the fault-tolerance layer of a multi-pod JAX LLM training and
+serving framework.
+"""
+
+__version__ = "1.0.0"

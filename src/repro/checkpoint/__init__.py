@@ -1,0 +1,25 @@
+"""Checkpointing: the ad hoc cloud's "VM snapshot" for JAX tasks.
+
+- :mod:`repro.checkpoint.serializer` — pytree ↔ bytes (+ shard splitting).
+- :mod:`repro.checkpoint.store` — per-host snapshot stores (memory/disk).
+- :mod:`repro.checkpoint.replicated` — P2P replicated checkpoint manager
+  (placement per the paper's ≤5%-joint-failure rule).
+- :mod:`repro.checkpoint.elastic` — restore onto a different mesh.
+"""
+
+from repro.checkpoint.serializer import (
+    deserialize_tree,
+    serialize_tree,
+    split_into_shards,
+    join_shards,
+)
+from repro.checkpoint.store import DiskStore, SnapshotStore
+
+__all__ = [
+    "serialize_tree",
+    "deserialize_tree",
+    "split_into_shards",
+    "join_shards",
+    "SnapshotStore",
+    "DiskStore",
+]

@@ -1,0 +1,70 @@
+"""Elastic restore: resume a checkpoint on a *different* mesh.
+
+The paper restores a VM snapshot on a substitute host. The TPU-native
+generalization (DESIGN.md §3): after losing hosts, the survivors form a
+smaller ``data`` axis and the checkpointed global state is re-laid-out
+onto the new mesh. Because the partition rule engine derives shardings
+from logical axes + the target mesh, resharding is a generic tree walk —
+any state (params, optimizer moments, KV caches) moves the same way.
+
+``plan_elastic_mesh`` picks the largest usable (data, model) grid from the
+surviving device count, preferring to keep the model axis intact (a model
+group is the unit of host loss in DESIGN.md's mapping).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.parallel.partition import tree_shardings
+
+Pytree = Any
+
+
+def plan_elastic_mesh(
+    n_devices: int, *, model_parallel: int, prefer_pow2: bool = True
+) -> tuple[int, int]:
+    """Largest (data, model) grid with model axis kept at ``model_parallel``.
+
+    Loses at most ``model_parallel-1`` devices' capacity (partial model
+    groups can't host a replica). If fewer than one model group survives,
+    model parallelism degrades to the largest power-of-two that fits.
+    """
+    assert n_devices >= 1
+    mp = model_parallel
+    while mp > n_devices:
+        mp //= 2
+    mp = max(1, mp)
+    data = n_devices // mp
+    if prefer_pow2 and data > 1:
+        p = 1
+        while p * 2 <= data:
+            p *= 2
+        data = p
+    return data, mp
+
+
+def make_elastic_mesh(devices, data: int, model: int) -> Mesh:
+    arr = np.array(list(devices)[: data * model]).reshape(data, model)
+    return Mesh(arr, ("data", "model"))
+
+
+def reshard_state(state: Pytree, axes_tree: Pytree, mesh: Mesh) -> Pytree:
+    """Lay out ``state`` (host numpy or any jax arrays) onto ``mesh``."""
+    abstract = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(np.shape(x), np.asarray(x).dtype), state
+    )
+    shardings = tree_shardings(axes_tree, abstract, mesh)
+    return jax.tree.map(
+        lambda x, s: jax.device_put(np.asarray(x), s), state, shardings
+    )
+
+
+def gather_state(state: Pytree) -> Pytree:
+    """Fully replicate a distributed state onto host memory (numpy) —
+    the serialization side of an elastic checkpoint."""
+    return jax.tree.map(lambda x: np.asarray(x), state)

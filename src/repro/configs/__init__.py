@@ -1,0 +1,45 @@
+"""Assigned architecture registry: ``--arch <id>`` resolves here.
+
+Each module defines ``CONFIG`` (the exact published figures) and ``reduced()``
+(a tiny same-family config for CPU smoke tests).
+"""
+
+from __future__ import annotations
+
+from repro.config import ModelConfig
+
+from repro.configs import (
+    phi4_mini_3_8b,
+    qwen3_8b,
+    smollm_360m,
+    minitron_4b,
+    falcon_mamba_7b,
+    llava_next_mistral_7b,
+    granite_moe_1b_a400m,
+    deepseek_moe_16b,
+    zamba2_1_2b,
+    whisper_medium,
+)
+
+_MODULES = [
+    phi4_mini_3_8b,
+    qwen3_8b,
+    smollm_360m,
+    minitron_4b,
+    falcon_mamba_7b,
+    llava_next_mistral_7b,
+    granite_moe_1b_a400m,
+    deepseek_moe_16b,
+    zamba2_1_2b,
+    whisper_medium,
+]
+
+ARCHS: dict[str, ModelConfig] = {m.CONFIG.arch_id: m.CONFIG for m in _MODULES}
+REDUCED: dict[str, ModelConfig] = {m.CONFIG.arch_id: m.reduced() for m in _MODULES}
+
+
+def get(arch_id: str, reduced: bool = False) -> ModelConfig:
+    table = REDUCED if reduced else ARCHS
+    if arch_id not in table:
+        raise KeyError(f"unknown arch {arch_id!r}; available: {sorted(table)}")
+    return table[arch_id]

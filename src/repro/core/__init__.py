@@ -1,0 +1,44 @@
+"""The paper's primary contribution: the ad hoc cloud runtime.
+
+Components map 1:1 onto the paper's architecture (see DESIGN.md §2):
+
+- :mod:`repro.core.reliability` — the ``host_reliability`` formula (§III-B).
+- :mod:`repro.core.availability` — heartbeat/availability checking (§III-A/C).
+- :mod:`repro.core.snapshot` — P2P snapshot placement (§III-D).
+- :mod:`repro.core.cloudlet` — cloudlets (§II-A).
+- :mod:`repro.core.server` — the ad hoc server (job service + VM service).
+- :mod:`repro.core.client` — the ad hoc client (monitor, probe, snapshot agent).
+- :mod:`repro.core.continuity` — guest lifecycle bound to JAX train/serve tasks.
+- :mod:`repro.core.events` — failure traces and replay (paper §IV).
+- :mod:`repro.core.simulation` — deterministic discrete-event clock/loop.
+"""
+
+from repro.core.reliability import HostRecord, ReliabilityRegistry, host_reliability
+from repro.core.snapshot import SnapshotScheduler, joint_failure_probability
+from repro.core.availability import AvailabilityChecker
+from repro.core.cloudlet import Cloudlet, CloudletRegistry
+from repro.core.server import AdHocServer, CloudJob, Command, JobState
+from repro.core.client import AdHocClient, ResourceMonitor
+from repro.core.cloud import AdHocCloudSim, SimParams
+from repro.core.simulation import EventLoop, SimClock
+
+__all__ = [
+    "AdHocServer",
+    "CloudJob",
+    "Command",
+    "JobState",
+    "AdHocClient",
+    "ResourceMonitor",
+    "AdHocCloudSim",
+    "SimParams",
+    "EventLoop",
+    "SimClock",
+    "HostRecord",
+    "ReliabilityRegistry",
+    "host_reliability",
+    "SnapshotScheduler",
+    "joint_failure_probability",
+    "AvailabilityChecker",
+    "Cloudlet",
+    "CloudletRegistry",
+]

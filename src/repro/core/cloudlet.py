@@ -1,0 +1,85 @@
+"""Cloudlets (paper §II-A): named guest groups offering one service.
+
+A cloudlet is the scheduling and snapshot-placement scope: "only hosts
+within a specific cloudlet need to be taken into account when scheduling a
+job destined for that cloudlet", and snapshot receivers are filtered by
+"the sender's cloudlet membership" (§III-D). A guest may belong to several
+cloudlets when jobs needing different environments share it.
+
+Here a cloudlet's *service* is an architecture id (e.g. a ``qwen3-8b``
+serving cloudlet) or a training job family; its members are host ids.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+@dataclass
+class Cloudlet:
+    name: str
+    service: str                       # e.g. arch id / environment label
+    members: set[str] = field(default_factory=set)
+
+    def join(self, host_id: str) -> None:
+        self.members.add(host_id)
+
+    def leave(self, host_id: str) -> None:
+        self.members.discard(host_id)
+
+    def __contains__(self, host_id: str) -> bool:
+        return host_id in self.members
+
+
+class CloudletRegistry:
+    def __init__(self):
+        self._cloudlets: dict[str, Cloudlet] = {}
+
+    def create(self, name: str, service: str) -> Cloudlet:
+        if name in self._cloudlets:
+            cl = self._cloudlets[name]
+            assert cl.service == service, (name, cl.service, service)
+            return cl
+        cl = Cloudlet(name, service)
+        self._cloudlets[name] = cl
+        return cl
+
+    def get(self, name: str) -> Cloudlet:
+        return self._cloudlets[name]
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._cloudlets
+
+    def names(self) -> list[str]:
+        return list(self._cloudlets)
+
+    def join(self, name: str, host_id: str) -> None:
+        self._cloudlets[name].join(host_id)
+
+    def leave_all(self, host_id: str) -> None:
+        for cl in self._cloudlets.values():
+            cl.leave(host_id)
+
+    def of_host(self, host_id: str) -> list[str]:
+        return [n for n, cl in self._cloudlets.items() if host_id in cl]
+
+    def for_service(self, service: str) -> list[Cloudlet]:
+        return [cl for cl in self._cloudlets.values() if cl.service == service]
+
+    def peers(self, name: str, host_id: str) -> list[str]:
+        """Other members of ``host_id``'s cloudlet ``name``."""
+        return [h for h in self._cloudlets[name].members if h != host_id]
+
+    def to_state(self) -> dict:
+        return {
+            n: {"service": cl.service, "members": sorted(cl.members)}
+            for n, cl in self._cloudlets.items()
+        }
+
+    @classmethod
+    def from_state(cls, state: dict) -> "CloudletRegistry":
+        reg = cls()
+        for n, kv in state.items():
+            cl = reg.create(n, kv["service"])
+            cl.members = set(kv["members"])
+        return reg

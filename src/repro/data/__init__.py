@@ -1,0 +1,5 @@
+"""Deterministic, checkpointable synthetic data pipeline."""
+
+from repro.data.synthetic import SyntheticDataset
+
+__all__ = ["SyntheticDataset"]

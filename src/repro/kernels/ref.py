@@ -1,0 +1,201 @@
+"""Pure-jnp reference oracles for every Pallas kernel.
+
+These are the semantics of record: Pallas kernels are tested against these
+with ``interpret=True`` sweeps, and the multi-pod dry-run lowers these (XLA
+path) so ``cost_analysis()`` sees real FLOPs rather than opaque custom calls.
+
+Conventions:
+- attention tensors are laid out ``(batch, seq, heads, head_dim)``;
+- GQA is expressed by ``n_heads = n_kv_heads * q_per_kv`` on the query only;
+- softmax statistics are computed in f32 regardless of input dtype.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30  # large-but-finite; avoids NaN from (-inf) - (-inf)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """RMS-normalize the trailing dim of ``x`` and scale by ``w``."""
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Flash attention (prefill / training) — reference = plain attention
+# ---------------------------------------------------------------------------
+
+
+def _expand_kv(k: jax.Array, n_heads: int) -> jax.Array:
+    """(B, S, K, D) -> (B, S, H, D) by repeating each KV head q_per_kv times."""
+    b, s, n_kv, d = k.shape
+    q_per_kv = n_heads // n_kv
+    if q_per_kv == 1:
+        return k
+    return jnp.repeat(k, q_per_kv, axis=2)
+
+
+def attention(
+    q: jax.Array,  # (B, Sq, H, D)
+    k: jax.Array,  # (B, Sk, K, D)
+    v: jax.Array,  # (B, Sk, K, D)
+    *,
+    causal: bool = True,
+    q_offset: int = 0,
+    scale: float | None = None,
+) -> jax.Array:
+    """Multi-head (GQA) attention oracle.
+
+    ``q_offset`` is the absolute position of ``q[:, 0]`` relative to
+    ``k[:, 0]`` (used when queries are a suffix of the key sequence).
+    """
+    b, sq, h, d = q.shape
+    sk = k.shape[1]
+    scale = scale if scale is not None else d ** -0.5
+    k = _expand_kv(k, h)
+    v = _expand_kv(v, h)
+    logits = jnp.einsum(
+        "bqhd,bkhd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale
+    if causal:
+        qpos = jnp.arange(sq)[:, None] + q_offset
+        kpos = jnp.arange(sk)[None, :]
+        mask = kpos <= qpos  # (Sq, Sk)
+        logits = jnp.where(mask[None, None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Decode attention (one query token vs long KV cache)
+# ---------------------------------------------------------------------------
+
+
+def decode_attention(
+    q: jax.Array,        # (B, H, D) — single new token per sequence
+    k: jax.Array,        # (B, S, K, D) — cache (may contain garbage past len)
+    v: jax.Array,        # (B, S, K, D)
+    lengths: jax.Array,  # (B,) int32 — #valid cache positions per sequence
+    *,
+    scale: float | None = None,
+) -> jax.Array:
+    """Flash-decode oracle: masked attention of one token over the cache."""
+    b, h, d = q.shape
+    s = k.shape[1]
+    scale = scale if scale is not None else d ** -0.5
+    k = _expand_kv(k, h)  # (B, S, H, D)
+    v = _expand_kv(v, h)
+    logits = jnp.einsum(
+        "bhd,bshd->bhs", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale
+    mask = jnp.arange(s)[None, :] < lengths[:, None]  # (B, S)
+    logits = jnp.where(mask[:, None, :], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhs,bshd->bhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Mamba1 selective scan
+# ---------------------------------------------------------------------------
+
+
+def selective_scan(
+    x: jax.Array,    # (B, S, Di)   — post-conv activations
+    dt: jax.Array,   # (B, S, Di)   — post-softplus step sizes
+    A: jax.Array,    # (Di, N)      — negative-definite state matrix
+    Bm: jax.Array,   # (B, S, N)    — input matrix (time-varying)
+    C: jax.Array,    # (B, S, N)    — output matrix (time-varying)
+    D: jax.Array,    # (Di,)        — skip connection
+    h0: jax.Array | None = None,  # (B, Di, N) initial state
+) -> tuple[jax.Array, jax.Array]:
+    """Sequential-scan oracle for the Mamba1 SSM.
+
+    h_t = exp(dt_t * A) * h_{t-1} + (dt_t * x_t) * B_t
+    y_t = (h_t C_t^T) + D * x_t
+
+    Returns ``(y, h_final)`` with y (B, S, Di) and h_final (B, Di, N).
+    """
+    b, s, di = x.shape
+    n = A.shape[1]
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+    Bf = Bm.astype(jnp.float32)
+    Cf = C.astype(jnp.float32)
+    if h0 is None:
+        h0 = jnp.zeros((b, di, n), jnp.float32)
+
+    dA = jnp.exp(dtf[..., None] * Af[None, None])          # (B,S,Di,N)
+    dBx = (dtf * xf)[..., None] * Bf[:, :, None, :]        # (B,S,Di,N)
+
+    def step(h, inputs):
+        da_t, dbx_t, c_t = inputs
+        h = da_t * h + dbx_t                               # (B,Di,N)
+        y = jnp.einsum("bdn,bn->bd", h, c_t)               # (B,Di)
+        return h, y
+
+    hT, ys = jax.lax.scan(
+        step,
+        h0.astype(jnp.float32),
+        (dA.swapaxes(0, 1), dBx.swapaxes(0, 1), Cf.swapaxes(0, 1)),
+    )
+    y = ys.swapaxes(0, 1) + D.astype(jnp.float32)[None, None] * xf
+    return y.astype(x.dtype), hT
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 SSD (scalar-A-per-head state space duality)
+# ---------------------------------------------------------------------------
+
+
+def ssd(
+    x: jax.Array,    # (B, S, Hs, P)  — heads Hs, head_dim P
+    dt: jax.Array,   # (B, S, Hs)     — post-softplus
+    A: jax.Array,    # (Hs,)          — negative scalar per head
+    Bm: jax.Array,   # (B, S, N)      — shared across heads (n_groups=1)
+    C: jax.Array,    # (B, S, N)
+    D: jax.Array,    # (Hs,)
+    h0: jax.Array | None = None,  # (B, Hs, P, N)
+) -> tuple[jax.Array, jax.Array]:
+    """Sequential oracle for Mamba2's SSD (the chunked kernel must match this).
+
+    h_t = exp(dt_t * A_h) * h_{t-1} + dt_t * (x_t ⊗ B_t)
+    y_t = h_t C_t + D_h * x_t
+    """
+    b, s, hs, p = x.shape
+    n = Bm.shape[-1]
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Bf = Bm.astype(jnp.float32)
+    Cf = C.astype(jnp.float32)
+    if h0 is None:
+        h0 = jnp.zeros((b, hs, p, n), jnp.float32)
+
+    da = jnp.exp(dtf * A.astype(jnp.float32)[None, None])  # (B,S,Hs)
+    dbx = jnp.einsum("bsh,bshp,bsn->bshpn", dtf, xf, Bf)   # (B,S,Hs,P,N)
+
+    def step(h, inputs):
+        da_t, dbx_t, c_t = inputs
+        h = da_t[..., None, None] * h + dbx_t              # (B,Hs,P,N)
+        y = jnp.einsum("bhpn,bn->bhp", h, c_t)
+        return h, y
+
+    hT, ys = jax.lax.scan(
+        step,
+        h0.astype(jnp.float32),
+        (da.swapaxes(0, 1), dbx.swapaxes(0, 1), Cf.swapaxes(0, 1)),
+    )
+    y = ys.swapaxes(0, 1) + D.astype(jnp.float32)[None, None, :, None] * xf
+    return y.astype(x.dtype), hT

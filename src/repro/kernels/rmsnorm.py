@@ -1,0 +1,61 @@
+"""Fused RMSNorm Pallas kernel.
+
+One grid step normalizes a ``(block_rows, d)`` tile held in VMEM: the
+mean-square reduction, rsqrt and scale all fuse into a single pass over
+HBM (the XLA fallback reads ``x`` twice: once for the variance, once for
+the scale). ``d`` is kept whole per tile — model dims here (≤ 8192 f32 =
+32 KiB/row) fit VMEM comfortably at 256 rows/tile.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    o_ref[...] = (y * w_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows", "interpret"))
+def rmsnorm(
+    x: jax.Array,
+    w: jax.Array,
+    eps: float = 1e-5,
+    *,
+    block_rows: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """RMS-normalize the trailing dim of ``x`` (any leading shape)."""
+    d = x.shape[-1]
+    lead = x.shape[:-1]
+    rows = 1
+    for s in lead:
+        rows *= s
+    x2 = x.reshape(rows, d)
+    br = min(block_rows, rows)
+    pad = (-rows) % br
+    if pad:
+        x2 = jnp.pad(x2, ((0, pad), (0, 0)))
+    n_blocks = (rows + pad) // br
+
+    out = pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x2.shape, x.dtype),
+        interpret=interpret,
+    )(x2, w)
+    if pad:
+        out = out[:rows]
+    return out.reshape(*lead, d)

@@ -1,0 +1,134 @@
+"""Mamba1 selective-scan Pallas kernel (chunked recurrence).
+
+TPU adaptation: the recurrence ``h_t = dA_t·h_{t-1} + dB_t·x_t`` is
+processed in VMEM-resident chunks — grid ``(batch, channel_blocks,
+seq_chunks)``, where the sequence dim iterates sequentially and the
+``(bc, N)`` carried state lives in VMEM scratch across chunk steps. Inside
+a chunk the scan runs as a log-depth associative scan over the chunk's
+``(c, bc, N)`` transition/update tensors (VPU work), so HBM sees each
+input exactly once. Channels block at 128 lanes (VPU width); the state
+dim N (=16 for falcon-mamba) stays whole.
+
+Layouts follow the XLA fallback in ``repro.kernels.ops`` so the two paths
+are drop-in interchangeable.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _scan_kernel(
+    x_ref,    # (1, c, bc)
+    dt_ref,   # (1, c, bc)
+    A_ref,    # (bc, N)
+    B_ref,    # (1, c, N)
+    C_ref,    # (1, c, N)
+    D_ref,    # (bc,)
+    h0_ref,   # (1, bc, N)
+    y_ref,    # (1, c, bc)  out
+    hT_ref,   # (1, bc, N)  out (final state)
+    h_ref,    # scratch (bc, N) — carried state
+):
+    ci = pl.program_id(2)
+    nc = pl.num_programs(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_ref[...] = h0_ref[0].astype(jnp.float32)
+
+    x = x_ref[0].astype(jnp.float32)       # (c, bc)
+    dt = dt_ref[0].astype(jnp.float32)     # (c, bc)
+    A = A_ref[...].astype(jnp.float32)     # (bc, N)
+    Bm = B_ref[0].astype(jnp.float32)      # (c, N)
+    C = C_ref[0].astype(jnp.float32)       # (c, N)
+
+    dA = jnp.exp(dt[:, :, None] * A[None])             # (c, bc, N)
+    dBx = (dt * x)[:, :, None] * Bm[:, None, :]        # (c, bc, N)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a2 * a1, a2 * b1 + b2
+
+    aa, bb = jax.lax.associative_scan(combine, (dA, dBx), axis=0)
+    hs = aa * h_ref[...][None] + bb                     # (c, bc, N)
+    y = jnp.einsum("cbn,cn->cb", hs, C)
+    y = y + D_ref[...].astype(jnp.float32)[None] * x
+    y_ref[0] = y.astype(y_ref.dtype)
+    h_ref[...] = hs[-1]
+
+    @pl.when(ci == nc - 1)
+    def _finish():
+        hT_ref[0] = h_ref[...]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("chunk", "block_channels", "interpret")
+)
+def selective_scan(
+    x: jax.Array,    # (B, S, Di)
+    dt: jax.Array,   # (B, S, Di)
+    A: jax.Array,    # (Di, N)
+    Bm: jax.Array,   # (B, S, N)
+    C: jax.Array,    # (B, S, N)
+    D: jax.Array,    # (Di,)
+    h0: jax.Array | None = None,
+    *,
+    chunk: int = 256,
+    block_channels: int = 128,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    B, S, Di = x.shape
+    N = A.shape[1]
+    if h0 is None:
+        h0 = jnp.zeros((B, Di, N), jnp.float32)
+
+    c = min(chunk, S)
+    bc = min(block_channels, Di)
+    ps = (-S) % c
+    pc = (-Di) % bc
+    if ps:
+        # padded timesteps: dt=0 -> dA=1, dBx=0 (identity transitions)
+        x = jnp.pad(x, ((0, 0), (0, ps), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, ps), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, ps), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, ps), (0, 0)))
+    if pc:
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, pc)))
+        dt = jnp.pad(dt, ((0, 0), (0, 0), (0, pc)))
+        A = jnp.pad(A, ((0, pc), (0, 0)))
+        D = jnp.pad(D, ((0, pc),))
+        h0 = jnp.pad(h0, ((0, 0), (0, pc), (0, 0)))
+    Sp, Dp = S + ps, Di + pc
+    ncs, ncb = Sp // c, Dp // bc
+
+    y, hT = pl.pallas_call(
+        _scan_kernel,
+        grid=(B, ncb, ncs),
+        in_specs=[
+            pl.BlockSpec((1, c, bc), lambda b, cb, ci: (b, ci, cb)),
+            pl.BlockSpec((1, c, bc), lambda b, cb, ci: (b, ci, cb)),
+            pl.BlockSpec((bc, N), lambda b, cb, ci: (cb, 0)),
+            pl.BlockSpec((1, c, N), lambda b, cb, ci: (b, ci, 0)),
+            pl.BlockSpec((1, c, N), lambda b, cb, ci: (b, ci, 0)),
+            pl.BlockSpec((bc,), lambda b, cb, ci: (cb,)),
+            pl.BlockSpec((1, bc, N), lambda b, cb, ci: (b, cb, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, c, bc), lambda b, cb, ci: (b, ci, cb)),
+            pl.BlockSpec((1, bc, N), lambda b, cb, ci: (b, cb, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Sp, Dp), x.dtype),
+            jax.ShapeDtypeStruct((B, Dp, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bc, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A, Bm, C, D, h0)
+    return y[:, :S, :Di], hT[:, :Di]

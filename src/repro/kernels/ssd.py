@@ -1,0 +1,135 @@
+"""Mamba2 SSD Pallas kernel (chunked matmul / state-space-duality form).
+
+The MXU-native formulation: within a chunk of ``c`` tokens the output is a
+masked (c × c) matmul (``C_i·B_j`` Gram matrix × decay mask), and chunks
+are stitched by a (P × N) carried state per head — so the heavy ops are
+all dots on MXU-aligned tiles, not elementwise recurrences. Grid
+``(batch, heads, seq_chunks)``; the ``(P, N)`` state carries in VMEM
+scratch across the sequential chunk dim.
+
+Per chunk and head:
+  y_intra[i] = Σ_{j≤i} exp(l_i - l_j)·(C_i·B_j)·dt_j·x_j      (c×c dot)
+  y_inter[i] = exp(l_i) · C_i · h                              (c×N dot)
+  h' = exp(l_last)·h + Σ_j exp(l_last - l_j)·dt_j·B_j ⊗ x_j    (N×c · c×P)
+
+with l = cumsum(dt·A) the per-head log-decay within the chunk.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(
+    x_ref,    # (1, c, 1, P)
+    dt_ref,   # (1, c, 1)
+    A_ref,    # (1,)
+    B_ref,    # (1, c, N)
+    C_ref,    # (1, c, N)
+    D_ref,    # (1,)
+    h0_ref,   # (1, 1, P, N)
+    y_ref,    # (1, c, 1, P) out
+    hT_ref,   # (1, 1, P, N) out
+    h_ref,    # scratch (P, N)
+    *,
+    chunk: int,
+):
+    ci = pl.program_id(2)
+    nc = pl.num_programs(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_ref[...] = h0_ref[0, 0].astype(jnp.float32)
+
+    x = x_ref[0, :, 0].astype(jnp.float32)       # (c, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)     # (c,)
+    a = A_ref[0].astype(jnp.float32)             # ()
+    Bm = B_ref[0].astype(jnp.float32)            # (c, N)
+    C = C_ref[0].astype(jnp.float32)             # (c, N)
+
+    da = dt * a                                  # (c,)
+    l = jnp.cumsum(da)                           # (c,) inclusive
+    # intra-chunk: masked decay Gram matmul
+    g = jax.lax.dot_general(C, Bm, (((1,), (1,)), ((), ())))   # (c, c)
+    ldiff = l[:, None] - l[None, :]
+    ii = jax.lax.iota(jnp.int32, chunk)
+    causal = ii[:, None] >= ii[None, :]
+    decay = jnp.where(causal, jnp.exp(ldiff), 0.0)
+    m = g * decay * dt[None, :]                                # (c, c)
+    y_intra = jax.lax.dot_general(m, x, (((1,), (0,)), ((), ())))  # (c, P)
+    # inter-chunk: carried state contribution
+    h = h_ref[...]
+    y_inter = jnp.exp(l)[:, None] * jax.lax.dot_general(
+        C, h, (((1,), (1,)), ((), ()))
+    )                                                          # (c, P)
+    y = y_intra + y_inter + D_ref[0].astype(jnp.float32) * x
+    y_ref[0, :, 0] = y.astype(y_ref.dtype)
+    # next state: h' = exp(l_last) h + Σ_j w_j B_j ⊗ x_j,  w_j = exp(l_last-l_j) dt_j
+    w = jnp.exp(l[-1] - l) * dt                                # (c,)
+    s = jax.lax.dot_general(
+        x * w[:, None], Bm, (((0,), (0,)), ((), ()))
+    )                                                          # (P, N)
+    h_ref[...] = jnp.exp(l[-1]) * h + s
+
+    @pl.when(ci == nc - 1)
+    def _finish():
+        hT_ref[0, 0] = h_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd(
+    x: jax.Array,    # (B, S, Hs, P)
+    dt: jax.Array,   # (B, S, Hs)
+    A: jax.Array,    # (Hs,)
+    Bm: jax.Array,   # (B, S, N)
+    C: jax.Array,    # (B, S, N)
+    D: jax.Array,    # (Hs,)
+    h0: jax.Array | None = None,
+    *,
+    chunk: int = 256,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    B, S, Hs, P = x.shape
+    N = Bm.shape[-1]
+    if h0 is None:
+        h0 = jnp.zeros((B, Hs, P, N), jnp.float32)
+
+    c = min(chunk, S)
+    ps = (-S) % c
+    if ps:
+        x = jnp.pad(x, ((0, 0), (0, ps), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, ps), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, ps), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, ps), (0, 0)))
+    Sp = S + ps
+    ncs = Sp // c
+
+    y, hT = pl.pallas_call(
+        functools.partial(_ssd_kernel, chunk=c),
+        grid=(B, Hs, ncs),
+        in_specs=[
+            pl.BlockSpec((1, c, 1, P), lambda b, h, ci: (b, ci, h, 0)),
+            pl.BlockSpec((1, c, 1), lambda b, h, ci: (b, ci, h)),
+            pl.BlockSpec((1,), lambda b, h, ci: (h,)),
+            pl.BlockSpec((1, c, N), lambda b, h, ci: (b, ci, 0)),
+            pl.BlockSpec((1, c, N), lambda b, h, ci: (b, ci, 0)),
+            pl.BlockSpec((1,), lambda b, h, ci: (h,)),
+            pl.BlockSpec((1, 1, P, N), lambda b, h, ci: (b, h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, c, 1, P), lambda b, h, ci: (b, ci, h, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda b, h, ci: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Sp, Hs, P), x.dtype),
+            jax.ShapeDtypeStruct((B, Hs, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A, Bm, C, D, h0)
+    return y[:, :S], hT

@@ -1,0 +1,145 @@
+"""Per-cell program builders shared by the dry-run, roofline and drivers.
+
+A *cell* is (architecture × input shape). ``build_cell`` returns the step
+function, abstract inputs and sharding trees for the cell's program:
+
+- ``train_*``  → the full train step (fwd + bwd + AdamW) over TrainState;
+- ``prefill_*``→ the prefill fn (params, batch) → (logits, cache);
+- ``decode_*`` → one ``serve_step`` (new token against a seq_len cache).
+
+Everything is ShapeDtypeStruct-based — no arrays are materialized, which
+is what lets 8B-class cells lower on a CPU container.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, RunConfig, ShapeConfig, SHAPES
+from repro.models import get_model
+from repro.models.model_api import ModelFns, batch_axes_for
+from repro.parallel.partition import tree_shardings
+from repro.training.state import abstract_train_state, train_state_axes
+from repro.training.step import make_train_step
+
+Pytree = Any
+
+
+@dataclass
+class CellProgram:
+    arch_id: str
+    shape: ShapeConfig
+    fn: Callable                     # positional-arg step function
+    abstract_args: tuple             # ShapeDtypeStructs matching fn
+    in_shardings: tuple | None       # pytrees of NamedSharding (None = auto)
+    out_shardings: Any               # pytree or None
+    kind: str                        # train | prefill | decode
+    model: ModelFns
+
+
+def _batch_shardings(model: ModelFns, shape: ShapeConfig, mesh,
+                     specs: dict) -> dict:
+    axes = batch_axes_for(specs)
+    return tree_shardings(axes, specs, mesh)
+
+
+def build_cell(
+    cfg: ModelConfig,
+    shape: ShapeConfig,
+    mesh,
+    *,
+    run: RunConfig | None = None,
+    serve_dtype=jnp.bfloat16,
+) -> CellProgram:
+    model = get_model(cfg)
+    run = run or RunConfig(arch=cfg.arch_id)
+    ispecs = model.input_specs(shape)
+
+    if shape.kind == "train":
+        state = abstract_train_state(model)
+        state_shard = tree_shardings(train_state_axes(model), state, mesh)
+        batch_shard = _batch_shardings(model, shape, mesh, ispecs)
+        step = make_train_step(model, run)
+        return CellProgram(
+            arch_id=cfg.arch_id,
+            shape=shape,
+            fn=step,
+            abstract_args=(state, ispecs),
+            in_shardings=(state_shard, batch_shard),
+            out_shardings=(state_shard, None),
+            kind="train",
+            model=model,
+        )
+
+    params = model.abstract_params(serve_dtype)
+    params_shard = tree_shardings(model.param_axes(), params, mesh)
+
+    if shape.kind == "prefill":
+        batch_shard = _batch_shardings(model, shape, mesh, ispecs)
+
+        def prefill(params, batch):
+            return model.prefill(params, batch)
+
+        return CellProgram(
+            arch_id=cfg.arch_id,
+            shape=shape,
+            fn=prefill,
+            abstract_args=(params, ispecs),
+            in_shardings=(params_shard, batch_shard),
+            out_shardings=None,
+            kind="prefill",
+            model=model,
+        )
+
+    # decode: one serve_step against a cache of seq_len tokens
+    cache = model.abstract_cache(shape.global_batch, shape.seq_len)
+    cache_shard = tree_shardings(
+        model.cache_axes(shape.global_batch, shape.seq_len), cache, mesh
+    )
+    batch_shard = _batch_shardings(model, shape, mesh, ispecs)
+
+    def serve_step(params, cache, batch):
+        return model.decode_step(params, cache, batch)
+
+    return CellProgram(
+        arch_id=cfg.arch_id,
+        shape=shape,
+        fn=serve_step,
+        abstract_args=(params, cache, ispecs),
+        in_shardings=(params_shard, cache_shard, batch_shard),
+        out_shardings=(None, cache_shard),
+        kind="decode",
+        model=model,
+    )
+
+
+def lower_cell(prog: CellProgram, mesh, *, exact_flops: bool = True) -> Any:
+    """jit + lower the cell's program under activation sharding.
+
+    ``exact_flops=True`` unrolls every scan during tracing so the compiled
+    module's ``cost_analysis()`` counts loop bodies × trip count (XLA
+    counts a ``while`` body once) — required for honest roofline terms.
+    """
+    from repro.parallel.partition import activation_sharding
+    from repro.parallel import tracing
+
+    # Fresh function identity per call: the unroll switch is a contextvar
+    # invisible to jax's tracing cache, so reusing ``prog.fn`` would hand
+    # the second lowering the first lowering's cached jaxpr.
+    fn = prog.fn
+
+    def _entry(*args):
+        return fn(*args)
+
+    jitted = jax.jit(
+        _entry,
+        in_shardings=prog.in_shardings,
+        out_shardings=prog.out_shardings,
+    )
+    with activation_sharding(mesh), tracing.exact_flops_mode(exact_flops):
+        return jitted.lower(*prog.abstract_args)

@@ -1,0 +1,225 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    # Fast-compile flags: skip expensive CPU codegen passes. The SPMD
+    # partitioner and collective insertion (what the dry-run validates)
+    # run in full; only backend codegen is reduced.
+    "--xla_backend_optimization_level=0 "
+    "--xla_llvm_disable_expensive_passes=true"
+)
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above MUST run before any jax import (jax locks the device
+count at first init). 512 placeholder CPU devices stand in for 2 pods ×
+256 chips of TPU v5e; ``lower().compile()`` of every cell proves the
+sharding configuration is coherent (no mismatched collectives, no
+undivisible dims, memory fits) without TPU hardware.
+
+Artifacts land in ``artifacts/dryrun/<arch>__<shape>__<mesh>.json``:
+memory analysis, cost analysis, per-collective byte counts, timings.
+The sweep is resumable — existing artifacts are skipped unless --force.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun [--arch A] [--shape S]
+        [--mesh single|multi|both] [--force] [--out DIR]
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+
+def _collect(compiled, lowered_unrolled, chips: int) -> dict:
+    from repro.launch.roofline import analyze_collectives
+
+    out: dict = {}
+    try:
+        mem = compiled.memory_analysis()
+        out["memory"] = {
+            "argument_size": int(getattr(mem, "argument_size_in_bytes", 0)),
+            "output_size": int(getattr(mem, "output_size_in_bytes", 0)),
+            "temp_size": int(getattr(mem, "temp_size_in_bytes", 0)),
+            # memory_analysis totals span all host placeholder devices
+            "temp_per_device": int(
+                getattr(mem, "temp_size_in_bytes", 0) / max(chips, 1)
+            ),
+        }
+    except Exception as e:  # CPU backend may not implement it
+        out["memory"] = {"error": str(e)}
+    try:
+        # global (pre-SPMD) exact flops/bytes from the UNROLLED lowering —
+        # scan bodies are emitted per-step so cost_analysis is trip-exact.
+        cost = lowered_unrolled.cost_analysis()
+        out["cost_global"] = {
+            "flops": float(cost.get("flops", 0.0)),
+            "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+            "transcendentals": float(cost.get("transcendentals", 0.0)),
+        }
+    except Exception as e:
+        out["cost_global"] = {"error": str(e)}
+    try:
+        # per-device collective bytes from the ROLLED compiled HLO with
+        # while-loop trip-count multiplication (validated vs unrolled).
+        hlo = compiled.as_text()
+        out["collectives"] = analyze_collectives(hlo)
+        out["hlo_bytes"] = len(hlo)
+    except Exception as e:
+        out["collectives"] = {"error": str(e)}
+    return out
+
+
+def parse_variant(spec: str | None) -> dict:
+    """--variant "seq_parallel=true,remat_policy=dots" -> field dict."""
+    if not spec:
+        return {}
+    out = {}
+    for kv in spec.split(","):
+        k, v = kv.split("=", 1)
+        if v.lower() in ("true", "false"):
+            out[k] = v.lower() == "true"
+        else:
+            try:
+                out[k] = int(v)
+            except ValueError:
+                try:
+                    out[k] = float(v)
+                except ValueError:
+                    out[k] = v
+    return out
+
+
+RUN_FIELDS = {"grad_compression", "microbatches"}
+
+
+def run_cell(arch_id: str, shape_name: str, mesh_kind: str, out_dir: str,
+             force: bool = False, variant: str | None = None) -> dict:
+    import dataclasses
+
+    import jax
+
+    from repro.config import SHAPES, RunConfig, cell_is_valid
+    from repro.configs import ARCHS
+    from repro.launch.cells import build_cell, lower_cell
+    from repro.launch.mesh import make_production_mesh
+
+    tag = f"{arch_id}__{shape_name}__{mesh_kind}"
+    if variant:
+        tag += "__" + variant.replace("=", "-").replace(",", "+")
+    path = os.path.join(out_dir, tag.replace("/", "_") + ".json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+
+    fields = parse_variant(variant)
+    cfg = ARCHS[arch_id]
+    cfg = dataclasses.replace(
+        cfg, **{k: v for k, v in fields.items() if k not in RUN_FIELDS}
+    )
+    run = RunConfig(
+        arch=arch_id,
+        **{k: v for k, v in fields.items() if k in RUN_FIELDS},
+    )
+    shape = SHAPES[shape_name]
+    ok, why = cell_is_valid(cfg, shape)
+    rec: dict = {
+        "arch": arch_id,
+        "shape": shape_name,
+        "mesh": mesh_kind,
+        "variant": variant or "baseline",
+        "chips": 512 if mesh_kind == "multi" else 256,
+    }
+    if not ok:
+        rec.update(status="skipped", reason=why)
+    else:
+        try:
+            mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+            prog = build_cell(cfg, shape, mesh, run=run)
+            t0 = time.time()
+            lowered = lower_cell(prog, mesh, exact_flops=False)
+            t1 = time.time()
+            compiled = lowered.compile()
+            t2 = time.time()
+            lowered_unrolled = lower_cell(prog, mesh, exact_flops=True)
+            t3 = time.time()
+            rec.update(
+                status="ok",
+                kind=prog.kind,
+                lower_s=round(t1 - t0, 2),
+                compile_s=round(t2 - t1, 2),
+                unrolled_lower_s=round(t3 - t2, 2),
+                **_collect(compiled, lowered_unrolled, rec["chips"]),
+            )
+            cost = rec.get("cost_global", {})
+            chips = rec["chips"]
+            rec["flops_global"] = float(cost.get("flops", 0.0))
+            rec["bytes_global"] = float(cost.get("bytes_accessed", 0.0))
+            # ideal-partition per-chip convention (see EXPERIMENTS.md):
+            rec["flops_per_device"] = rec["flops_global"] / chips
+            rec["bytes_per_device"] = rec["bytes_global"] / chips
+            del compiled, lowered, lowered_unrolled
+        except Exception as e:
+            rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                       trace=traceback.format_exc()[-4000:])
+    os.makedirs(out_dir, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--variant", default=None,
+                    help="comma-separated ModelConfig/RunConfig overrides, "
+                         "e.g. seq_parallel=true,remat_policy=dots")
+    args = ap.parse_args()
+
+    from repro.config import SHAPES
+    from repro.configs import ARCHS
+
+    archs = [args.arch] if args.arch else list(ARCHS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            for mesh in meshes:
+                t0 = time.time()
+                rec = run_cell(arch, shape, mesh, args.out, args.force,
+                               variant=args.variant)
+                dt = time.time() - t0
+                status = rec.get("status")
+                extra = ""
+                if status == "ok":
+                    extra = (
+                        f"flops/dev={rec.get('flops_per_device', 0):.3e} "
+                        f"lower={rec.get('lower_s')}s "
+                        f"compile={rec.get('compile_s')}s"
+                    )
+                elif status == "error":
+                    extra = rec.get("error", "")[:120]
+                elif status == "skipped":
+                    extra = rec.get("reason", "")
+                print(f"[{dt:7.1f}s] {arch:24s} {shape:12s} {mesh:6s} "
+                      f"{status:8s} {extra}", flush=True)
+                results.append(rec)
+
+    n_ok = sum(r.get("status") == "ok" for r in results)
+    n_skip = sum(r.get("status") == "skipped" for r in results)
+    n_err = sum(r.get("status") == "error" for r in results)
+    print(f"\nDRY-RUN SUMMARY: {n_ok} ok, {n_skip} skipped, {n_err} errors "
+          f"of {len(results)} cells")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    "--xla_backend_optimization_level=0 "
+    "--xla_llvm_disable_expensive_passes=true"
+)
+
+"""Gold-standard measurement for the hillclimb cells: compile the UNROLLED
+program and read per-device flops/bytes (post-fusion, post-SPMD — includes
+replication waste the ideal-partition convention misses) plus flat-parsed
+collective bytes (trip-exact because nothing is rolled).
+
+    PYTHONPATH=src python -m repro.launch.exact_compile ARCH SHAPE VARIANT
+"""
+
+import json
+import sys
+import time
+
+
+def main() -> None:
+    arch, shape_name = sys.argv[1], sys.argv[2]
+    variant = sys.argv[3] if len(sys.argv) > 3 and sys.argv[3] != "-" else None
+
+    import dataclasses
+
+    from repro.config import SHAPES, RunConfig
+    from repro.configs import ARCHS
+    from repro.launch.cells import build_cell, lower_cell
+    from repro.launch.dryrun import RUN_FIELDS, parse_variant
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.roofline import parse_collective_bytes
+
+    fields = parse_variant(variant)
+    cfg = dataclasses.replace(
+        ARCHS[arch], **{k: v for k, v in fields.items() if k not in RUN_FIELDS}
+    )
+    run = RunConfig(arch=arch,
+                    **{k: v for k, v in fields.items() if k in RUN_FIELDS})
+    mesh = make_production_mesh()
+    prog = build_cell(cfg, SHAPES[shape_name], mesh, run=run)
+    t0 = time.time()
+    low = lower_cell(prog, mesh, exact_flops=True)
+    comp = low.compile()
+    t1 = time.time()
+    ca = comp.cost_analysis()
+    coll = parse_collective_bytes(comp.as_text())
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "single",
+        "variant": variant or "baseline",
+        "chips": 256,
+        "measurement": "compiled-unrolled (per-device, post-fusion)",
+        "compile_s": round(t1 - t0, 1),
+        "flops_per_device": float(ca.get("flops", 0.0)),
+        "bytes_per_device": float(ca.get("bytes accessed", 0.0)),
+        "collectives": coll,
+    }
+    tag = f"{arch}__{shape_name}__exact"
+    if variant:
+        tag += "__" + variant.replace("=", "-").replace(",", "+")
+    out = os.path.join("artifacts", "exact", tag + ".json")
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(rec, f, indent=1)
+    print(json.dumps(rec, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,331 @@
+"""Roofline analysis from compiled dry-run artifacts (TPU v5e target).
+
+Three terms, in seconds, per (arch × shape × mesh):
+
+    compute    = HLO_FLOPs_global    / (chips × 197e12 FLOP/s bf16)
+    memory     = HLO_bytes_per_chip  / 819e9 B/s HBM
+    collective = collective_bytes_per_chip / (links × 50e9 B/s)
+
+Conventions (calibrated empirically — see ``calibrate_cost_semantics``):
+``cost_analysis()`` on a post-SPMD module reports *per-device* flops and
+bytes, so global FLOPs = flops × chips. Collective bytes are parsed from
+the post-SPMD HLO text: the sum of operand bytes of every all-reduce /
+all-gather / reduce-scatter / all-to-all / collective-permute, which are
+already per-device quantities. v5e has 4 ICI links per chip on a 2D
+torus; collective traffic is modeled over ``ICI_LINKS_USED`` links.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+
+import numpy as np
+
+PEAK_FLOPS_BF16 = 197e12       # per chip
+HBM_BW = 819e9                 # bytes/s per chip
+ICI_BW_PER_LINK = 50e9         # bytes/s per link (one direction)
+ICI_LINKS_USED = 2             # conservative: bidirectional ring per axis
+
+COLLECTIVE_OPS = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def parse_collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Sum result-shape bytes of every collective op in an HLO dump.
+
+    Works on both lowered (pre-SPMD) and compiled (post-SPMD) text; use
+    the compiled text for per-device numbers. ``all-reduce-start`` etc.
+    (async pairs) count once via the ``-start`` form; plain forms count
+    directly. ``fusion`` lines never contain collective op names.
+    """
+    totals = {op: 0 for op in COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # result type is between '=' and the op name
+        m = re.match(r"^(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.*)$", s)
+        if not m:
+            continue
+        rest = m.group(1)
+        for op in COLLECTIVE_OPS:
+            # match "<type> opname(" — avoid matching "-done" duplicates
+            hit = re.search(
+                rf"^(?P<ty>.*?)\s(?P<op>{op})(?:-start)?\(", rest
+            )
+            if hit is None or f"{op}-done" in rest:
+                continue
+            ty = hit.group("ty")
+            b = sum(
+                _shape_bytes(dt, dims) for dt, dims in _SHAPE_RE.findall(ty)
+            )
+            totals[op] += b
+            break
+    return totals
+
+
+@dataclass
+class RooflineTerms:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_chip: float
+    bytes_per_chip: float
+    collective_bytes_per_chip: float
+    collective_breakdown: dict
+    model_flops: float
+
+    @property
+    def flops_global(self) -> float:
+        return self.flops_per_chip * self.chips
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_chip / PEAK_FLOPS_BF16
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_chip / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes_per_chip / (
+            ICI_LINKS_USED * ICI_BW_PER_LINK
+        )
+
+    @property
+    def bound(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — remat/redundancy waste indicator."""
+        if self.flops_global == 0:
+            return 0.0
+        return self.model_flops / self.flops_global
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the dominant-term-bound step time that is useful
+        compute: t_useful_compute / max(all terms)."""
+        t_useful = (self.model_flops / self.chips) / PEAK_FLOPS_BF16
+        t_step = max(self.t_compute, self.t_memory, self.t_collective)
+        return t_useful / t_step if t_step > 0 else 0.0
+
+    def to_dict(self) -> dict:
+        return {
+            "arch": self.arch,
+            "shape": self.shape,
+            "mesh": self.mesh,
+            "chips": self.chips,
+            "flops_per_chip": self.flops_per_chip,
+            "flops_global": self.flops_global,
+            "bytes_per_chip": self.bytes_per_chip,
+            "collective_bytes_per_chip": self.collective_bytes_per_chip,
+            "collective_breakdown": self.collective_breakdown,
+            "model_flops": self.model_flops,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bound": self.bound,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def model_flops_for(cfg, shape) -> float:
+    """Analytic MODEL_FLOPS: 6·N·D train / 2·N·D per generated-token batch
+    (N = active params; D = tokens processed)."""
+    counts = cfg.param_counts()
+    n_active = counts["active"]
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    tokens = shape.global_batch  # one token per sequence
+    return 2.0 * n_active * tokens
+
+
+def terms_from_artifact(art: dict, cfg, shape) -> RooflineTerms:
+    coll = art["collectives"]
+    return RooflineTerms(
+        arch=art["arch"],
+        shape=art["shape"],
+        mesh=art["mesh"],
+        chips=art["chips"],
+        flops_per_chip=art["flops_per_device"],
+        bytes_per_chip=art["bytes_per_device"],
+        collective_bytes_per_chip=float(sum(coll.values())),
+        collective_breakdown=coll,
+        model_flops=model_flops_for(cfg, shape),
+    )
+
+
+def calibrate_cost_semantics(mesh) -> dict:
+    """Empirically determine whether cost_analysis() reports per-device or
+    global FLOPs on this jax version by compiling a known matmul both ways.
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    n = 512
+    x = jax.ShapeDtypeStruct((n, n), jnp.float32)
+    expected = 2 * n * n * n
+
+    single = jax.jit(lambda a, b: a @ b).lower(x, x).compile()
+    f_single = float(single.cost_analysis().get("flops", 0.0))
+
+    sh = NamedSharding(mesh, P("data", None))
+    sharded = (
+        jax.jit(lambda a, b: a @ b, in_shardings=(sh, sh), out_shardings=sh)
+        .lower(x, x)
+        .compile()
+    )
+    f_sharded = float(sharded.cost_analysis().get("flops", 0.0))
+    n_dev = int(np.prod(list(mesh.shape.values())))
+    return {
+        "expected_flops": expected,
+        "single_device_flops": f_single,
+        "sharded_flops_reported": f_sharded,
+        "per_device": bool(abs(f_sharded * n_dev - f_single) <
+                           abs(f_sharded - f_single)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Trip-count-aware collective analysis (rolled HLO)
+# ---------------------------------------------------------------------------
+
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{")
+_WHILE_RE = re.compile(
+    r"while\(.*?\),\s*condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)"
+)
+_CALL_RE = re.compile(r"(?:calls=|to_apply=)%?([\w.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONST_RE = re.compile(r"[su]32\[\]\s+constant\((\d+)\)")
+
+
+def _split_computations(hlo_text: str) -> tuple[dict, str]:
+    """name -> list[str] instruction lines; returns (comps, entry_name)."""
+    comps: dict[str, list[str]] = {}
+    entry = None
+    current: list[str] | None = None
+    for raw in hlo_text.splitlines():
+        s = raw.strip()
+        if current is None:
+            m = _COMP_HDR.match(s)
+            if m:
+                name = m.group(2)
+                comps[name] = current = []
+                if m.group(1):
+                    entry = name
+        else:
+            if s == "}" or s.startswith("} "):
+                current = None
+            else:
+                current.append(s)
+    return comps, entry
+
+
+def _line_collective(s: str) -> tuple[str, int] | None:
+    m = re.match(r"^(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.*)$", s)
+    if not m:
+        return None
+    rest = m.group(1)
+    for op in COLLECTIVE_OPS:
+        hit = re.search(rf"^(?P<ty>.*?)\s{op}(?:-start)?\(", rest)
+        if hit is None or f"{op}-done" in rest:
+            continue
+        ty = hit.group("ty")
+        b = sum(_shape_bytes(dt, dims) for dt, dims in _SHAPE_RE.findall(ty))
+        return op, b
+    return None
+
+
+def analyze_collectives(hlo_text: str) -> dict[str, float]:
+    """Collective bytes with while-loop bodies multiplied by trip count.
+
+    XLA post-SPMD text keeps scans as ``while`` ops; a collective inside a
+    32-layer scan body executes 32×, so flat parsing undercounts. This
+    walks the call graph from ENTRY, multiplying through nested whiles
+    (trip counts read from the loop-condition constant) and counting calls
+    /fusions/branches once.
+    """
+    comps, entry = _split_computations(hlo_text)
+    if entry is None:
+        return parse_collective_bytes(hlo_text)
+
+    def trip_count(cond_name: str) -> int:
+        consts = [int(c) for line in comps.get(cond_name, [])
+                  for c in _CONST_RE.findall(line)]
+        return max(consts, default=1) or 1
+
+    edges: dict[str, list[tuple[str, int]]] = {n: [] for n in comps}
+    direct: dict[str, dict[str, int]] = {
+        n: {op: 0 for op in COLLECTIVE_OPS} for n in comps
+    }
+    for name, lines in comps.items():
+        for s in lines:
+            wm = _WHILE_RE.search(s)
+            if wm:
+                cond, body = wm.group(1), wm.group(2)
+                edges[name].append((body, trip_count(cond)))
+                continue
+            bm = _BRANCH_RE.search(s)
+            if bm:
+                for b in bm.group(1).split(","):
+                    b = b.strip().lstrip("%")
+                    if b:
+                        edges[name].append((b, 1))
+                continue
+            cm = _CALL_RE.search(s)
+            if cm:
+                edges[name].append((cm.group(1), 1))
+            lc = _line_collective(s)
+            if lc:
+                direct[name][lc[0]] += lc[1]
+
+    import functools as _ft
+
+    @_ft.lru_cache(maxsize=None)
+    def total(name: str) -> tuple:
+        acc = dict(direct.get(name, {}))
+        for child, mult in edges.get(name, []):
+            if child == name:
+                continue
+            for op, b in zip(COLLECTIVE_OPS, total(child)):
+                acc[op] = acc.get(op, 0) + mult * b
+        return tuple(acc.get(op, 0) for op in COLLECTIVE_OPS)
+
+    return dict(zip(COLLECTIVE_OPS, (float(x) for x in total(entry))))

@@ -1,0 +1,40 @@
+"""Model zoo: pure-functional JAX models for every assigned architecture.
+
+``get_model(cfg)`` returns a :class:`repro.models.model_api.ModelFns` whose
+members are jit-compatible pure functions. Families:
+
+- ``dense`` / ``vlm``  → :mod:`repro.models.transformer`
+- ``moe``              → :mod:`repro.models.moe`
+- ``ssm``              → :mod:`repro.models.mamba`
+- ``hybrid``           → :mod:`repro.models.hybrid`
+- ``encdec``           → :mod:`repro.models.encdec`
+"""
+
+from __future__ import annotations
+
+from repro.config import ModelConfig
+from repro.models.model_api import ModelFns
+
+
+def get_model(cfg: ModelConfig) -> ModelFns:
+    if cfg.family in ("dense", "vlm"):
+        from repro.models import transformer
+
+        return transformer.make_model(cfg)
+    if cfg.family == "moe":
+        from repro.models import moe
+
+        return moe.make_model(cfg)
+    if cfg.family == "ssm":
+        from repro.models import mamba
+
+        return mamba.make_model(cfg)
+    if cfg.family == "hybrid":
+        from repro.models import hybrid
+
+        return hybrid.make_model(cfg)
+    if cfg.family == "encdec":
+        from repro.models import encdec
+
+        return encdec.make_model(cfg)
+    raise ValueError(f"unknown family {cfg.family!r}")

@@ -1,0 +1,220 @@
+"""Whisper-style encoder-decoder backbone (stub conv frontend).
+
+Per the assignment, the modality frontend is a STUB: ``input_specs()``
+supplies precomputed frame embeddings ``frames (B, ENC_SEQ, d_model)`` (the
+output the conv1d×2 + GELU stem would produce). The transformer backbone —
+non-causal encoder, causal decoder with cross-attention, learned positions,
+GELU MLPs, tied unembedding — is implemented fully.
+
+Decode shapes lower the *decoder* step: self-attention KV cache of
+``seq_len`` plus the fixed cross-attention KV computed at prefill.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, ShapeConfig
+from repro.kernels import ops
+from repro.models import layers as ll
+from repro.models.model_api import ModelFns, PSpec
+from repro.parallel import tracing
+
+ENC_SEQ = 1500  # whisper: 30 s of audio -> 1500 frames after the conv stem
+
+
+def build_specs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    Le, Ld = cfg.n_encoder_layers, cfg.n_layers
+    max_pos = cfg.max_position or 32_768
+    return {
+        **ll.embed_specs(cfg),
+        "enc_pos": PSpec((ENC_SEQ, d), ("seq", "embed"), init="normal"),
+        "dec_pos": PSpec((max_pos, d), ("seq", "embed"), init="normal"),
+        "enc_final_ln": PSpec((d,), ("embed",), init="ones"),
+        "enc_layers": {
+            "attn": ll.attn_specs(cfg, layers=Le),
+            "mlp": ll.mlp_specs(cfg, cfg.d_ff, layers=Le),
+        },
+        "dec_layers": {
+            "self_attn": ll.attn_specs(cfg, layers=Ld),
+            "cross_attn": ll.attn_specs(cfg, layers=Ld),
+            "mlp": ll.mlp_specs(cfg, cfg.d_ff, layers=Ld),
+        },
+    }
+
+
+# ---------------------------------------------------------------------------
+# Encoder
+# ---------------------------------------------------------------------------
+
+
+def encode(params, frames: jax.Array, cfg: ModelConfig) -> jax.Array:
+    x = ll.cast(frames) + ll.cast(params["enc_pos"])[None, : frames.shape[1]]
+    positions = jnp.arange(x.shape[1])
+
+    def body(carry, lp):
+        h = ops.rmsnorm(carry, lp["attn"]["ln"], cfg.norm_eps)
+        a, _ = ll.attn_forward(lp["attn"], h, cfg, positions, causal=False)
+        y = carry + a
+        h = ops.rmsnorm(y, lp["mlp"]["ln"], cfg.norm_eps)
+        return y + ll.mlp_forward(lp["mlp"], h, cfg), None
+
+    from repro.models.transformer import apply_remat
+    body = apply_remat(body, cfg)
+    x, _ = jax.lax.scan(body, x, params["enc_layers"], unroll=tracing.scan_unroll())
+    return ops.rmsnorm(x, params["enc_final_ln"], cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# Decoder
+# ---------------------------------------------------------------------------
+
+
+def _cross_kv(lp, enc_out, cfg):
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, ll.cast(lp["wk"]))
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, ll.cast(lp["wv"]))
+    return k, v
+
+
+def _dec_block(lp, x, cfg, positions, enc_out, *, collect_kv=False):
+    h = ops.rmsnorm(x, lp["self_attn"]["ln"], cfg.norm_eps)
+    a, kv_self = ll.attn_forward(lp["self_attn"], h, cfg, positions, causal=True)
+    x = x + a
+    h = ops.rmsnorm(x, lp["cross_attn"]["ln"], cfg.norm_eps)
+    kv_cross = _cross_kv(lp["cross_attn"], enc_out, cfg)
+    a, _ = ll.attn_forward(
+        lp["cross_attn"], h, cfg, positions, causal=False, kv=kv_cross
+    )
+    x = x + a
+    h = ops.rmsnorm(x, lp["mlp"]["ln"], cfg.norm_eps)
+    x = x + ll.mlp_forward(lp["mlp"], h, cfg)
+    if collect_kv:
+        return x, (kv_self, kv_cross)
+    return x, None
+
+
+def _decoder(params, cfg, tokens, enc_out, *, remat=True, collect_kv=False):
+    x = ll.embed_lookup(params, tokens)
+    S = x.shape[1]
+    x = x + ll.cast(params["dec_pos"])[None, :S]
+    positions = jnp.arange(S)
+
+    def body(carry, lp):
+        out, kv = _dec_block(lp, carry, cfg, positions, enc_out,
+                             collect_kv=collect_kv)
+        if collect_kv:
+            kv = jax.tree.map(lambda t: t.astype(jnp.bfloat16), kv)
+        return out, kv
+
+    if remat:
+        from repro.models.transformer import apply_remat
+        body = apply_remat(body, cfg)
+    x, kvs = jax.lax.scan(body, x, params["dec_layers"], unroll=tracing.scan_unroll())
+    x = ops.rmsnorm(x, params["final_ln"], cfg.norm_eps)
+    return x, kvs
+
+
+# ---------------------------------------------------------------------------
+# Entry points
+# ---------------------------------------------------------------------------
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    enc_out = encode(params, batch["frames"], cfg)
+    hidden, _ = _decoder(params, cfg, batch["tokens"], enc_out, remat=True)
+    return ll.lm_loss(params, hidden, batch["labels"], cfg)
+
+
+def prefill_fn(params, batch, cfg: ModelConfig):
+    enc_out = encode(params, batch["frames"], cfg)
+    hidden, kvs = _decoder(
+        params, cfg, batch["tokens"], enc_out, remat=False, collect_kv=True
+    )
+    (self_k, self_v), (cross_k, cross_v) = kvs
+    logits = ll.logits_last(params, hidden[:, -1], cfg)
+    cache = {
+        "self_k": self_k, "self_v": self_v,
+        "cross_k": cross_k, "cross_v": cross_v,
+    }
+    return logits, cache
+
+
+def decode_fn(params, cache, batch, cfg: ModelConfig):
+    positions = batch["positions"]
+    x = ll.embed_lookup(params, batch["tokens"])
+    x = x + ll.cast(params["dec_pos"])[positions][:, None]
+
+    def body(carry, xs):
+        lp, sk, sv, ck, cv = xs
+        h = ops.rmsnorm(carry, lp["self_attn"]["ln"], cfg.norm_eps)
+        a, sk, sv = ll.attn_decode(lp["self_attn"], h, cfg, positions, sk, sv)
+        y = carry + a
+        h = ops.rmsnorm(y, lp["cross_attn"]["ln"], cfg.norm_eps)
+        enc_len = jnp.full((h.shape[0],), ck.shape[1], jnp.int32)
+        a, _, _ = ll.attn_decode(
+            lp["cross_attn"], h, cfg, enc_len - 1, ck, cv, update_cache=False
+        )
+        y = y + a
+        h = ops.rmsnorm(y, lp["mlp"]["ln"], cfg.norm_eps)
+        return y + ll.mlp_forward(lp["mlp"], h, cfg), (sk, sv)
+
+    x, (sk, sv) = jax.lax.scan(
+        body, x,
+        (params["dec_layers"], cache["self_k"], cache["self_v"],
+         cache["cross_k"], cache["cross_v"]),
+        unroll=tracing.scan_unroll(),
+    )
+    x = ops.rmsnorm(x, params["final_ln"], cfg.norm_eps)
+    logits = ll.logits_last(params, x[:, 0], cfg)
+    return logits, {
+        "self_k": sk, "self_v": sv,
+        "cross_k": cache["cross_k"], "cross_v": cache["cross_v"],
+    }
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_seq: int) -> dict:
+    L, K, dh = cfg.n_layers, cfg.n_kv_heads, cfg.d_head
+    axes = ("layers", "batch", "seq_fallback", "kv_heads", "head_dim")
+    return {
+        "self_k": PSpec((L, batch, max_seq, K, dh), axes, init="zeros"),
+        "self_v": PSpec((L, batch, max_seq, K, dh), axes, init="zeros"),
+        "cross_k": PSpec((L, batch, ENC_SEQ, K, dh), axes, init="zeros"),
+        "cross_v": PSpec((L, batch, ENC_SEQ, K, dh), axes, init="zeros"),
+    }
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    enc = {
+        "frames": jax.ShapeDtypeStruct(
+            (b, min(s, ENC_SEQ), cfg.d_model), jnp.bfloat16
+        )
+    }
+    if shape.kind == "train":
+        return {
+            **enc,
+            "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        }
+    if shape.kind == "prefill":
+        return {**enc, "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    return {
+        "tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+        "positions": jax.ShapeDtypeStruct((b,), jnp.int32),
+    }
+
+
+def make_model(cfg: ModelConfig) -> ModelFns:
+    return ModelFns(
+        cfg=cfg,
+        param_specs=build_specs(cfg),
+        cache_specs=functools.partial(cache_specs, cfg),
+        loss=functools.partial(loss_fn, cfg=cfg),
+        prefill=functools.partial(prefill_fn, cfg=cfg),
+        decode_step=functools.partial(decode_fn, cfg=cfg),
+        input_specs=functools.partial(input_specs, cfg),
+    )

@@ -1,0 +1,301 @@
+"""Zamba2-style hybrid: Mamba2 (SSD) backbone + one weight-SHARED attention
+block applied every ``attn_every`` layers (with a per-application input
+projection over [hidden ‖ original embedding], following the Zamba wiring).
+
+Runs the 500k-token decode shape: the Mamba2 state is O(1) in sequence length
+and the shared-attention KV caches are sequence-sharded over the ``model``
+axis by the partition rule engine.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, ShapeConfig
+from repro.kernels import ops
+from repro.models import layers as ll
+from repro.models.model_api import ModelFns, PSpec, standard_input_specs
+from repro.parallel import tracing
+from repro.parallel.partition import shard
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+
+def mamba2_block_specs(cfg: ModelConfig, layers: int) -> dict:
+    d, di, N, W = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.d_conv
+    nh = cfg.n_ssm_heads
+    lead, lx = (layers,), ("layers",)
+    return {
+        "ln": PSpec(lead + (d,), lx + ("embed",), init="ones"),
+        "wz": PSpec(lead + (d, di), lx + ("embed_in", "inner")),
+        "w_xbc": PSpec(lead + (d, di + 2 * N), lx + ("embed_in", "inner")),
+        "conv_w": PSpec(lead + (W, di + 2 * N), lx + ("conv", "inner")),
+        "conv_b": PSpec(lead + (di + 2 * N,), lx + ("inner",), init="zeros"),
+        "wdt": PSpec(lead + (d, nh), lx + ("embed_in", "ssm_heads")),
+        "dt_bias": PSpec(lead + (nh,), lx + ("ssm_heads",), init="zeros"),
+        "A_log": PSpec(lead + (nh,), lx + ("ssm_heads",), init="small"),
+        "D": PSpec(lead + (nh,), lx + ("ssm_heads",), init="ones"),
+        "gate_ln": PSpec(lead + (di,), lx + ("inner",), init="ones"),
+        "out_proj": PSpec(lead + (di, d), lx + ("inner", "embed_out")),
+    }
+
+
+def build_specs(cfg: ModelConfig) -> dict:
+    n_apps = len(cfg.hybrid_attention_layers())
+    d = cfg.d_model
+    return {
+        **ll.embed_specs(cfg),
+        "layers": mamba2_block_specs(cfg, cfg.n_layers),
+        "shared": {
+            "attn": ll.attn_specs(cfg),
+            "mlp": ll.mlp_specs(cfg, cfg.d_ff),
+        },
+        # per-application adapter over [hidden ‖ embedding0] (Zamba wiring)
+        "app_proj": PSpec((n_apps, 2 * d, d), ("layers", "embed_in", "embed")),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block
+# ---------------------------------------------------------------------------
+
+
+def _split_xbc(xbc, cfg):
+    di, N = cfg.d_inner, cfg.ssm_state
+    return xbc[..., :di], xbc[..., di:di + N], xbc[..., di + N:]
+
+
+def _block(lp, x, cfg: ModelConfig, *, conv_state=None, ssm_state=None,
+           return_state=False):
+    B, S, d = x.shape
+    nh, P = cfg.n_ssm_heads, cfg.ssm_head_dim
+    h = ops.rmsnorm(x, lp["ln"], cfg.norm_eps)
+    z = jnp.einsum("bsd,de->bse", h, ll.cast(lp["wz"]))
+    xbc = jnp.einsum("bsd,de->bse", h, ll.cast(lp["w_xbc"]))
+    xbc = shard(xbc, "batch", None, "inner")
+    pre_conv = xbc
+    xbc = ops.causal_conv1d(xbc, lp["conv_w"], lp["conv_b"], state=conv_state)
+    xbc = jax.nn.silu(xbc.astype(jnp.float32)).astype(xbc.dtype)
+    xin, Bm, C = _split_xbc(xbc, cfg)
+
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", h, ll.cast(lp["wdt"])).astype(jnp.float32)
+        + lp["dt_bias"].astype(jnp.float32)
+    )
+    A = -jnp.exp(lp["A_log"].astype(jnp.float32))
+    xh = xin.reshape(B, S, nh, P)
+    y, hT = ops.ssd(
+        xh, dt.astype(xh.dtype), A, Bm, C, lp["D"].astype(jnp.float32),
+        h0=ssm_state, chunk=cfg.ssm_chunk,
+    )
+    y = y.reshape(B, S, cfg.d_inner)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(z.dtype)
+    y = ops.rmsnorm(y, lp["gate_ln"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, ll.cast(lp["out_proj"]))
+    out = x + shard(out, "batch", None, None)
+    if not return_state:
+        return out, None
+    W = cfg.d_conv
+    new_conv = pre_conv[:, S - (W - 1):, :] if S >= W - 1 else jnp.pad(
+        pre_conv, ((0, 0), (W - 1 - S, 0), (0, 0))
+    )
+    return out, (new_conv.astype(jnp.bfloat16), hT)
+
+
+def _block_decode(lp, x, cfg: ModelConfig, conv_state, ssm_state):
+    B = x.shape[0]
+    nh, P = cfg.n_ssm_heads, cfg.ssm_head_dim
+    h = ops.rmsnorm(x, lp["ln"], cfg.norm_eps)
+    z = jnp.einsum("bsd,de->bse", h, ll.cast(lp["wz"]))
+    xbc = jnp.einsum("bsd,de->bse", h, ll.cast(lp["w_xbc"]))
+    new_conv = jnp.concatenate([conv_state.astype(xbc.dtype), xbc], axis=1)[:, 1:]
+    xbc = ops.causal_conv1d(xbc, lp["conv_w"], lp["conv_b"], state=conv_state)
+    xbc = jax.nn.silu(xbc.astype(jnp.float32)).astype(xbc.dtype)
+    xin, Bm, C = _split_xbc(xbc, cfg)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", h, ll.cast(lp["wdt"])).astype(jnp.float32)
+        + lp["dt_bias"].astype(jnp.float32)
+    )
+    A = -jnp.exp(lp["A_log"].astype(jnp.float32))
+    y, h_new = ops.ssd_step(
+        xin[:, 0].reshape(B, nh, P), dt[:, 0].astype(xin.dtype), A,
+        Bm[:, 0], C[:, 0], lp["D"].astype(jnp.float32), ssm_state,
+    )
+    y = y.reshape(B, 1, cfg.d_inner)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(z.dtype)
+    y = ops.rmsnorm(y, lp["gate_ln"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, ll.cast(lp["out_proj"]))
+    return x + out, new_conv.astype(jnp.bfloat16), h_new
+
+
+# ---------------------------------------------------------------------------
+# Shared attention block
+# ---------------------------------------------------------------------------
+
+
+def _shared_block(params, app_idx, x, x0, cfg, positions, *, kv_cache=None,
+                  decode_positions=None):
+    """Apply the weight-shared attention+MLP block (application `app_idx`).
+
+    Returns (new_x, (k, v)) — full-seq mode — or (new_x, (ck, cv)) in decode
+    mode when `kv_cache`=(ck, cv) is given.
+    """
+    sp = params["shared"]
+    proj = ll.cast(params["app_proj"][app_idx])
+    inp = jnp.einsum("bsd,df->bsf", jnp.concatenate([x, x0], -1), proj)
+    h = ops.rmsnorm(inp, sp["attn"]["ln"], cfg.norm_eps)
+    if kv_cache is None:
+        a, kv = ll.attn_forward(sp["attn"], h, cfg, positions)
+    else:
+        a, ck, cv = ll.attn_decode(
+            sp["attn"], h, cfg, decode_positions, kv_cache[0], kv_cache[1]
+        )
+        kv = (ck, cv)
+    inp = inp + a
+    h = ops.rmsnorm(inp, sp["mlp"]["ln"], cfg.norm_eps)
+    inp = inp + ll.mlp_forward(sp["mlp"], h, cfg)
+    return x + inp, kv
+
+
+# ---------------------------------------------------------------------------
+# Backbone: segments of mamba layers between shared-attention applications
+# ---------------------------------------------------------------------------
+
+
+def _segments(cfg: ModelConfig):
+    apps = cfg.hybrid_attention_layers()
+    bounds = apps + [cfg.n_layers]
+    return [(apps[i], bounds[i], bounds[i + 1]) for i in range(len(apps))]
+
+
+def _slice_stack(tree, a, b):
+    return jax.tree.map(lambda t: t[a:b], tree)
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    x = ll.embed_lookup(params, batch["tokens"])
+    x0 = x
+    positions = jnp.arange(x.shape[1])
+
+    def body(carry, lp):
+        out, _ = _block(lp, carry, cfg)
+        return out, None
+
+    from repro.models.transformer import apply_remat
+    body = apply_remat(body, cfg)
+    shared = jax.checkpoint(
+        lambda x_, i: _shared_block(params, i, x_, x0, cfg, positions)[0],
+        static_argnums=(1,),
+    )
+    for app_idx, (layer_i, a, b) in enumerate(_segments(cfg)):
+        x = shared(x, app_idx)
+        x, _ = jax.lax.scan(body, x, _slice_stack(params["layers"], a, b),
+                            unroll=tracing.scan_unroll())
+    hidden = ops.rmsnorm(x, params["final_ln"], cfg.norm_eps)
+    return ll.lm_loss(params, hidden, batch["labels"], cfg)
+
+
+def prefill_fn(params, batch, cfg: ModelConfig):
+    x = ll.embed_lookup(params, batch["tokens"])
+    x0 = x
+    positions = jnp.arange(x.shape[1])
+    convs, ssms, att_k, att_v = [], [], [], []
+
+    def body(carry, lp):
+        out, st = _block(lp, carry, cfg, return_state=True)
+        return out, st
+
+    for app_idx, (layer_i, a, b) in enumerate(_segments(cfg)):
+        x, (k, v) = _shared_block(params, app_idx, x, x0, cfg, positions)
+        att_k.append(k.astype(jnp.bfloat16))
+        att_v.append(v.astype(jnp.bfloat16))
+        x, (cs, ss) = jax.lax.scan(body, x, _slice_stack(params["layers"], a, b),
+                                   unroll=tracing.scan_unroll())
+        convs.append(cs)
+        ssms.append(ss)
+    x = ops.rmsnorm(x, params["final_ln"], cfg.norm_eps)
+    logits = ll.logits_last(params, x[:, -1], cfg)
+    cache = {
+        "conv": jnp.concatenate(convs, 0),
+        "ssm": jnp.concatenate(ssms, 0),
+        "att_k": jnp.stack(att_k, 0),
+        "att_v": jnp.stack(att_v, 0),
+    }
+    return logits, cache
+
+
+def decode_fn(params, cache, batch, cfg: ModelConfig):
+    x = ll.embed_lookup(params, batch["tokens"])
+    x0 = x
+    positions = batch["positions"]
+    convs, ssms, att_k, att_v = [], [], [], []
+
+    def body(carry, xs):
+        lp, cs, ss = xs
+        out, cs, ss = _block_decode(lp, carry, cfg, cs, ss)
+        return out, (cs, ss)
+
+    for app_idx, (layer_i, a, b) in enumerate(_segments(cfg)):
+        x, (ck, cv) = _shared_block(
+            params, app_idx, x, x0, cfg, None,
+            kv_cache=(cache["att_k"][app_idx], cache["att_v"][app_idx]),
+            decode_positions=positions,
+        )
+        att_k.append(ck)
+        att_v.append(cv)
+        x, (cs, ss) = jax.lax.scan(
+            body, x,
+            (_slice_stack(params["layers"], a, b),
+             cache["conv"][a:b], cache["ssm"][a:b]),
+            unroll=tracing.scan_unroll(),
+        )
+        convs.append(cs)
+        ssms.append(ss)
+    x = ops.rmsnorm(x, params["final_ln"], cfg.norm_eps)
+    logits = ll.logits_last(params, x[:, 0], cfg)
+    new_cache = {
+        "conv": jnp.concatenate(convs, 0),
+        "ssm": jnp.concatenate(ssms, 0),
+        "att_k": jnp.stack(att_k, 0),
+        "att_v": jnp.stack(att_v, 0),
+    }
+    return logits, new_cache
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_seq: int) -> dict:
+    L, N, W = cfg.n_layers, cfg.ssm_state, cfg.d_conv
+    di = cfg.d_inner
+    nh, P = cfg.n_ssm_heads, cfg.ssm_head_dim
+    n_apps = len(cfg.hybrid_attention_layers())
+    K, dh = cfg.n_kv_heads, cfg.d_head
+    return {
+        "conv": PSpec((L, batch, W - 1, di + 2 * N),
+                      ("layers", "batch", "conv", "inner"), init="zeros"),
+        "ssm": PSpec((L, batch, nh, P, N),
+                     ("layers", "batch", "ssm_heads", None, "state"),
+                     init="zeros"),
+        "att_k": PSpec((n_apps, batch, max_seq, K, dh),
+                       ("layers", "batch", "seq_fallback", "kv_heads",
+                        "head_dim"), init="zeros"),
+        "att_v": PSpec((n_apps, batch, max_seq, K, dh),
+                       ("layers", "batch", "seq_fallback", "kv_heads",
+                        "head_dim"), init="zeros"),
+    }
+
+
+def make_model(cfg: ModelConfig) -> ModelFns:
+    return ModelFns(
+        cfg=cfg,
+        param_specs=build_specs(cfg),
+        cache_specs=functools.partial(cache_specs, cfg),
+        loss=functools.partial(loss_fn, cfg=cfg),
+        prefill=functools.partial(prefill_fn, cfg=cfg),
+        decode_step=functools.partial(decode_fn, cfg=cfg),
+        input_specs=functools.partial(standard_input_specs, cfg),
+    )

@@ -1,0 +1,259 @@
+"""Shared layer primitives: RoPE, GQA attention blocks, MLPs, embeddings, loss.
+
+All functions are pure; parameters come in as nested dicts built from
+:class:`repro.models.model_api.PSpec` tables. Activation sharding constraints
+are injected via :func:`repro.parallel.partition.shard` (no-op without an
+active mesh), which is what lets one model codebase serve both the CPU smoke
+tests and the 512-chip dry-run.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.kernels import ops
+from repro.models.model_api import PSpec
+from repro.parallel import tracing
+from repro.parallel.partition import shard
+
+COMPUTE_DTYPE = jnp.bfloat16
+
+
+def cast(x):
+    return x.astype(COMPUTE_DTYPE)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotate-half RoPE. x (..., S, H, D) or (B, H, D); positions broadcastable
+    to x's sequence dims."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(angles)[..., None, :]  # broadcast over heads
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention block
+# ---------------------------------------------------------------------------
+
+
+def attn_specs(cfg: ModelConfig, layers: int | None = None) -> dict:
+    """Parameter specs for one (or `layers` stacked) attention block(s)."""
+    d, H, K, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    lead = () if layers is None else (layers,)
+    lax_ = () if layers is None else ("layers",)
+    specs = {
+        "wq": PSpec(lead + (d, H, dh), lax_ + ("embed_in", "heads", "head_dim")),
+        "wk": PSpec(lead + (d, K, dh), lax_ + ("embed_in", "kv_heads", "head_dim")),
+        "wv": PSpec(lead + (d, K, dh), lax_ + ("embed_in", "kv_heads", "head_dim")),
+        "wo": PSpec(lead + (H, dh, d), lax_ + ("heads", "head_dim", "embed_out")),
+        "ln": PSpec(lead + (d,), lax_ + ("embed",), init="ones"),
+    }
+    if cfg.qk_norm:
+        specs["q_norm"] = PSpec(lead + (dh,), lax_ + ("head_dim",), init="ones")
+        specs["k_norm"] = PSpec(lead + (dh,), lax_ + ("head_dim",), init="ones")
+    return specs
+
+
+def _project_qkv(p: dict, x: jax.Array, cfg: ModelConfig, positions: jax.Array):
+    """x (B,S,d) -> q (B,S,H,dh), k/v (B,S,K,dh), with qk-norm + RoPE."""
+    q = jnp.einsum("bsd,dhk->bshk", x, cast(p["wq"]))
+    k = jnp.einsum("bsd,dhk->bshk", x, cast(p["wk"]))
+    v = jnp.einsum("bsd,dhk->bshk", x, cast(p["wv"]))
+    if cfg.qk_norm:
+        q = ops.rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = ops.rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    if cfg.rope_theta > 0 and not cfg.learned_positions:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    q = shard(q, "batch", None, "heads", None)
+    k = shard(k, "batch", None, "kv_heads", None)
+    v = shard(v, "batch", None, "kv_heads", None)
+    return q, k, v
+
+
+def attn_forward(
+    p: dict,
+    x: jax.Array,            # (B, S, d) — already normalized input
+    cfg: ModelConfig,
+    positions: jax.Array,    # (S,) or (B, S)
+    *,
+    causal: bool = True,
+    kv: tuple[jax.Array, jax.Array] | None = None,  # cross-attention K/V
+) -> tuple[jax.Array, tuple[jax.Array, jax.Array]]:
+    """Full-sequence attention (train / prefill). Returns (out, (k, v))."""
+    q, k, v = (None, None, None)
+    if kv is None:
+        q, k, v = _project_qkv(p, x, cfg, positions)
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, cast(p["wq"]))
+        if cfg.qk_norm:
+            q = ops.rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        if cfg.rope_theta > 0 and not cfg.learned_positions:
+            q = rope(q, positions, cfg.rope_theta)
+        k, v = kv
+    out = ops.attention(q, k, v, causal=causal)
+    out = jnp.einsum("bshk,hkd->bsd", out, cast(p["wo"]))
+    return shard(out, "batch", None, None), (k, v)
+
+
+def attn_decode(
+    p: dict,
+    x: jax.Array,            # (B, 1, d)
+    cfg: ModelConfig,
+    positions: jax.Array,    # (B,)
+    cache_k: jax.Array,      # (B, S, K, dh)
+    cache_v: jax.Array,
+    *,
+    update_cache: bool = True,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Single-token attention against a cache. Returns (out, new_k, new_v)."""
+    q, k, v = _project_qkv(p, x, cfg, positions[:, None])
+    if update_cache:
+        cache_k = kv_append(cache_k, k, positions)
+        cache_v = kv_append(cache_v, v, positions)
+    out = ops.decode_attention(q[:, 0], cache_k, cache_v, positions + 1)
+    out = jnp.einsum("bhk,hkd->bd", out, cast(p["wo"]))[:, None]
+    return out, cache_k, cache_v
+
+
+def kv_append(cache: jax.Array, new: jax.Array, positions: jax.Array) -> jax.Array:
+    """Scatter one token per sequence into the cache seq dim.
+
+    cache (B, S, K, dh), new (B, 1, K, dh), positions (B,).
+    """
+    b = cache.shape[0]
+    return cache.at[jnp.arange(b), positions].set(new[:, 0].astype(cache.dtype))
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def mlp_specs(cfg: ModelConfig, width: int, layers: int | None = None) -> dict:
+    d = cfg.d_model
+    lead = () if layers is None else (layers,)
+    lax_ = () if layers is None else ("layers",)
+    if cfg.gated_mlp:
+        return {
+            "wg": PSpec(lead + (d, width), lax_ + ("embed_in", "mlp")),
+            "wu": PSpec(lead + (d, width), lax_ + ("embed_in", "mlp")),
+            "wd": PSpec(lead + (width, d), lax_ + ("mlp", "embed_out")),
+            "ln": PSpec(lead + (d,), lax_ + ("embed",), init="ones"),
+        }
+    return {
+        "wi": PSpec(lead + (d, width), lax_ + ("embed_in", "mlp")),
+        "wd": PSpec(lead + (width, d), lax_ + ("mlp", "embed_out")),
+        "ln": PSpec(lead + (d,), lax_ + ("embed",), init="ones"),
+    }
+
+
+def mlp_forward(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """x (..., d) — input already normalized."""
+    if cfg.gated_mlp:
+        g = jnp.einsum("...d,df->...f", x, cast(p["wg"]))
+        u = jnp.einsum("...d,df->...f", x, cast(p["wu"]))
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(g.dtype) * u
+    else:
+        h = jnp.einsum("...d,df->...f", x, cast(p["wi"]))
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(h.dtype)
+    h = shard(h, "batch", None, "mlp") if h.ndim == 3 else h
+    return jnp.einsum("...f,fd->...d", h, cast(p["wd"]))
+
+
+# ---------------------------------------------------------------------------
+# Embeddings + loss
+# ---------------------------------------------------------------------------
+
+
+def embed_specs(cfg: ModelConfig) -> dict:
+    d, v = cfg.d_model, cfg.vocab_size
+    specs = {
+        "embedding": PSpec((v, d), ("vocab_gather", "embed_model"), init="normal"),
+        "final_ln": PSpec((d,), ("embed",), init="ones"),
+    }
+    if not cfg.tie_embeddings:
+        specs["unembed"] = PSpec((d, v), ("embed_in", "vocab"))
+    return specs
+
+
+def embed_lookup(p: dict, tokens: jax.Array) -> jax.Array:
+    x = cast(p["embedding"])[tokens]
+    return shard(x, "batch", None, None)
+
+
+def _logits_chunk(p: dict, h: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """h (..., d) -> logits (..., V), f32."""
+    if cfg.tie_embeddings:
+        w = cast(p["embedding"])  # (V, d)
+        logits = jnp.einsum("...d,vd->...v", h, w).astype(jnp.float32)
+    else:
+        logits = jnp.einsum("...d,dv->...v", h, cast(p["unembed"])).astype(
+            jnp.float32
+        )
+    if logits.ndim == 3:
+        logits = shard(logits, "batch", None, "vocab")
+    return logits
+
+
+def lm_loss(
+    p: dict,
+    hidden: jax.Array,   # (B, S, d) — final-norm already applied
+    labels: jax.Array,   # (B, S) int32; -1 entries are masked out
+    cfg: ModelConfig,
+    *,
+    chunk: int = 512,
+    z_loss_coef: float = 1e-4,
+) -> tuple[jax.Array, dict]:
+    """Chunked cross-entropy: logits are materialized ``chunk`` tokens at a
+    time under a scan so the (B, S, V) tensor never exists."""
+    b, s, d = hidden.shape
+    c = min(chunk, s)
+    pad = (-s) % c
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    ns = (s + pad) // c
+    hs = hidden.reshape(b, ns, c, d).swapaxes(0, 1)
+    ls = labels.reshape(b, ns, c).swapaxes(0, 1)
+
+    def chunk_loss(carry, inp):
+        tot, zt, cnt = carry
+        hc, lc = inp
+        logits = _logits_chunk(p, hc, cfg)                    # (B,c,V) f32
+        lse = jax.nn.logsumexp(logits, axis=-1)               # (B,c)
+        mask = lc >= 0
+        lbl = jnp.where(mask, lc, 0)
+        gold = jnp.take_along_axis(logits, lbl[..., None], axis=-1)[..., 0]
+        nll = jnp.where(mask, lse - gold, 0.0)
+        z = jnp.where(mask, jnp.square(lse), 0.0)
+        return (tot + nll.sum(), zt + z.sum(), cnt + mask.sum()), None
+
+    init = (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32),
+            jnp.zeros((), jnp.int32))
+    (tot, zt, cnt), _ = jax.lax.scan(chunk_loss, init, (hs, ls),
+                                     unroll=tracing.scan_unroll())
+    denom = jnp.maximum(cnt, 1).astype(jnp.float32)
+    ce = tot / denom
+    z = zt / denom
+    loss = ce + z_loss_coef * z
+    return loss, {"ce": ce, "z_loss": z, "tokens": denom}
+
+
+def logits_last(p: dict, hidden_last: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """hidden_last (B, d) -> logits (B, V) for sampling."""
+    return _logits_chunk(p, hidden_last, cfg)

@@ -1,0 +1,198 @@
+"""Mamba1 selective-SSM LM (falcon-mamba-7b): attention-free backbone.
+
+Falcon-Mamba = Mamba1 blocks + extra RMS normalization of the (dt, B, C)
+SSM inputs (the stabilization introduced by the Falcon team). The scan is the
+chunked formulation from ``repro.kernels.ops`` (associative scan within
+chunks) — the same blocking the Pallas TPU kernel uses, so HLO FLOPs/bytes
+reflect kernelized execution.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, ShapeConfig
+from repro.kernels import ops
+from repro.models import layers as ll
+from repro.models.model_api import ModelFns, PSpec, standard_input_specs
+from repro.parallel import tracing
+from repro.parallel.partition import shard
+
+
+def mamba_block_specs(cfg: ModelConfig, layers: int) -> dict:
+    d, di, N, R, W = (
+        cfg.d_model,
+        cfg.d_inner,
+        cfg.ssm_state,
+        cfg.dt_rank,
+        cfg.d_conv,
+    )
+    lead, lx = (layers,), ("layers",)
+    return {
+        "ln": PSpec(lead + (d,), lx + ("embed",), init="ones"),
+        "wx": PSpec(lead + (d, di), lx + ("embed_in", "inner")),
+        "wz": PSpec(lead + (d, di), lx + ("embed_in", "inner")),
+        "conv_w": PSpec(lead + (W, di), lx + ("conv", "inner")),
+        "conv_b": PSpec(lead + (di,), lx + ("inner",), init="zeros"),
+        "wdt": PSpec(lead + (di, R), lx + ("inner", "dt_rank")),
+        "wB": PSpec(lead + (di, N), lx + ("inner", "state")),
+        "wC": PSpec(lead + (di, N), lx + ("inner", "state")),
+        "dt_proj": PSpec(lead + (R, di), lx + ("dt_rank", "inner")),
+        "dt_bias": PSpec(lead + (di,), lx + ("inner",), init="zeros"),
+        "A_log": PSpec(lead + (di, N), lx + ("inner", "state"), init="small"),
+        "D": PSpec(lead + (di,), lx + ("inner",), init="ones"),
+        "out_proj": PSpec(lead + (di, d), lx + ("inner", "embed_out")),
+    }
+
+
+def build_specs(cfg: ModelConfig) -> dict:
+    return {
+        **ll.embed_specs(cfg),
+        "layers": mamba_block_specs(cfg, cfg.n_layers),
+    }
+
+
+def _rms(x):
+    """Parameter-free RMS normalization (falcon-mamba's dt/B/C norm)."""
+    x32 = x.astype(jnp.float32)
+    return (x32 * jax.lax.rsqrt(jnp.mean(jnp.square(x32), -1, keepdims=True)
+                                 + 1e-6)).astype(x.dtype)
+
+
+def _ssm_inputs(lp, xin, cfg):
+    """Common projection path: xin (B,S,di) -> (dt, Bm, C, A, D)."""
+    dt_low = _rms(jnp.einsum("bsd,dr->bsr", xin, ll.cast(lp["wdt"])))
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,rd->bsd", dt_low, ll.cast(lp["dt_proj"])).astype(
+            jnp.float32
+        )
+        + lp["dt_bias"].astype(jnp.float32)
+    )
+    Bm = _rms(jnp.einsum("bsd,dn->bsn", xin, ll.cast(lp["wB"])))
+    C = _rms(jnp.einsum("bsd,dn->bsn", xin, ll.cast(lp["wC"])))
+    A = -jnp.exp(lp["A_log"].astype(jnp.float32))
+    return dt, Bm, C, A, lp["D"].astype(jnp.float32)
+
+
+def _block(lp, x, cfg: ModelConfig, *, conv_state=None, ssm_state=None,
+           return_state=False):
+    """Full-seq mamba block. Returns (out, (conv_state, ssm_state))."""
+    B, S, d = x.shape
+    h = ops.rmsnorm(x, lp["ln"], cfg.norm_eps)
+    xin = jnp.einsum("bsd,de->bse", h, ll.cast(lp["wx"]))
+    z = jnp.einsum("bsd,de->bse", h, ll.cast(lp["wz"]))
+    xin = shard(xin, "batch", None, "inner")
+    pre_conv = xin
+    xin = ops.causal_conv1d(xin, lp["conv_w"], lp["conv_b"], state=conv_state)
+    xin = jax.nn.silu(xin.astype(jnp.float32)).astype(xin.dtype)
+
+    dt, Bm, C, A, D = _ssm_inputs(lp, xin, cfg)
+    y, hT = ops.selective_scan(
+        xin, dt.astype(xin.dtype), A, Bm, C, D,
+        h0=ssm_state, chunk=cfg.ssm_chunk,
+        compute_dtype=jnp.bfloat16 if cfg.ssm_dtype == "bf16"
+        else jnp.float32,
+    )
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(z.dtype)
+    out = jnp.einsum("bse,ed->bsd", y, ll.cast(lp["out_proj"]))
+    out = x + shard(out, "batch", None, None)
+    if not return_state:
+        return out, None
+    W = cfg.d_conv
+    new_conv = pre_conv[:, S - (W - 1):, :] if S >= W - 1 else jnp.pad(
+        pre_conv, ((0, 0), (W - 1 - S, 0), (0, 0))
+    )
+    return out, (new_conv.astype(jnp.bfloat16), hT)
+
+
+def _block_decode(lp, x, cfg: ModelConfig, conv_state, ssm_state):
+    """Single-token mamba block. x (B,1,d)."""
+    h = ops.rmsnorm(x, lp["ln"], cfg.norm_eps)
+    xin = jnp.einsum("bsd,de->bse", h, ll.cast(lp["wx"]))
+    z = jnp.einsum("bsd,de->bse", h, ll.cast(lp["wz"]))
+    new_conv = jnp.concatenate([conv_state.astype(xin.dtype), xin], axis=1)[:, 1:]
+    xin = ops.causal_conv1d(xin, lp["conv_w"], lp["conv_b"], state=conv_state)
+    xin = jax.nn.silu(xin.astype(jnp.float32)).astype(xin.dtype)
+
+    dt, Bm, C, A, D = _ssm_inputs(lp, xin, cfg)
+    y, h_new = ops.selective_scan_step(
+        xin[:, 0], dt[:, 0].astype(xin.dtype), A, Bm[:, 0], C[:, 0], D, ssm_state
+    )
+    y = y[:, None] * jax.nn.silu(z.astype(jnp.float32)).astype(z.dtype)
+    out = jnp.einsum("bse,ed->bsd", y, ll.cast(lp["out_proj"]))
+    return x + out, new_conv.astype(jnp.bfloat16), h_new
+
+
+# ---------------------------------------------------------------------------
+# Entry points
+# ---------------------------------------------------------------------------
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    x = ll.embed_lookup(params, batch["tokens"])
+
+    def body(carry, lp):
+        out, _ = _block(lp, carry, cfg)
+        return out, None
+
+    from repro.models.transformer import apply_remat
+    body = apply_remat(body, cfg)
+    x, _ = jax.lax.scan(body, x, params["layers"], unroll=tracing.scan_unroll())
+    hidden = ops.rmsnorm(x, params["final_ln"], cfg.norm_eps)
+    return ll.lm_loss(params, hidden, batch["labels"], cfg)
+
+
+def prefill_fn(params, batch, cfg: ModelConfig):
+    x = ll.embed_lookup(params, batch["tokens"])
+
+    def body(carry, lp):
+        out, st = _block(lp, carry, cfg, return_state=True)
+        return out, st
+
+    x, (convs, ssms) = jax.lax.scan(body, x, params["layers"],
+                                    unroll=tracing.scan_unroll())
+    x = ops.rmsnorm(x, params["final_ln"], cfg.norm_eps)
+    logits = ll.logits_last(params, x[:, -1], cfg)
+    return logits, {"conv": convs, "ssm": ssms}
+
+
+def decode_fn(params, cache, batch, cfg: ModelConfig):
+    x = ll.embed_lookup(params, batch["tokens"])
+
+    def body(carry, xs):
+        lp, cs, ss = xs
+        out, cs, ss = _block_decode(lp, carry, cfg, cs, ss)
+        return out, (cs, ss)
+
+    x, (convs, ssms) = jax.lax.scan(
+        body, x, (params["layers"], cache["conv"], cache["ssm"]),
+        unroll=tracing.scan_unroll(),
+    )
+    x = ops.rmsnorm(x, params["final_ln"], cfg.norm_eps)
+    logits = ll.logits_last(params, x[:, 0], cfg)
+    return logits, {"conv": convs, "ssm": ssms}
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_seq: int) -> dict:
+    L, di, N, W = cfg.n_layers, cfg.d_inner, cfg.ssm_state, cfg.d_conv
+    return {
+        "conv": PSpec((L, batch, W - 1, di),
+                      ("layers", "batch", "conv", "inner"), init="zeros"),
+        "ssm": PSpec((L, batch, di, N),
+                     ("layers", "batch", "inner", "state"), init="zeros"),
+    }
+
+
+def make_model(cfg: ModelConfig) -> ModelFns:
+    return ModelFns(
+        cfg=cfg,
+        param_specs=build_specs(cfg),
+        cache_specs=functools.partial(cache_specs, cfg),
+        loss=functools.partial(loss_fn, cfg=cfg),
+        prefill=functools.partial(prefill_fn, cfg=cfg),
+        decode_step=functools.partial(decode_fn, cfg=cfg),
+        input_specs=functools.partial(standard_input_specs, cfg),
+    )

@@ -1,0 +1,200 @@
+"""Model protocol + the param-spec system (single source of truth).
+
+Every family module builds a nested dict of :class:`PSpec` (shape, logical
+axes, initializer). From that one structure we derive:
+
+- ``init_params``   — materialized fp32 arrays (seeded, fan-in scaled),
+- ``param_axes``    — a same-structure pytree of logical-axis tuples that the
+  partition rule engine maps to mesh ``PartitionSpec``s,
+- ``abstract_params`` — ``ShapeDtypeStruct`` stand-ins for the dry-run.
+
+Logical axis vocabulary (see ``repro.parallel.partition`` for mesh mapping):
+``vocab, embed, embed_in, heads, kv_heads, head_dim, mlp, experts,
+expert_mlp, layers, state, conv, dt_rank, ssm_heads, batch, seq, null``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, ShapeConfig
+
+Pytree = Any
+
+
+@dataclass(frozen=True)
+class PSpec:
+    """Declarative parameter spec."""
+
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]
+    init: str = "fan_in"  # fan_in | zeros | ones | normal | small
+    fan_axis: int = -2    # which axis is fan-in for scaled init
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _materialize(spec: PSpec, key: jax.Array, dtype=jnp.float32) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dtype)
+    if spec.init == "normal":
+        return jax.random.normal(key, spec.shape, dtype) * 0.02
+    if spec.init == "small":
+        return jax.random.normal(key, spec.shape, dtype) * 1e-4
+    # fan_in: normal(0, 1/sqrt(fan_in)) — fan over all axes except the last
+    fan = max(1, math.prod(spec.shape[:-1]) if len(spec.shape) > 1 else spec.shape[0])
+    # layer-stacked params: exclude the leading "layers" axis from fan
+    if spec.axes and spec.axes[0] == "layers" and len(spec.shape) > 2:
+        fan = max(1, math.prod(spec.shape[1:-1]))
+    return jax.random.normal(key, spec.shape, dtype) * (fan ** -0.5)
+
+
+def init_from_specs(specs: Pytree, rng: jax.Array, dtype=jnp.float32) -> Pytree:
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=lambda x: isinstance(x, PSpec))
+    keys = jax.random.split(rng, len(leaves))
+    vals = [_materialize(s, k, dtype) for s, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def axes_from_specs(specs: Pytree) -> Pytree:
+    return jax.tree.map(
+        lambda s: s.axes, specs, is_leaf=lambda x: isinstance(x, PSpec)
+    )
+
+
+def abstract_from_specs(specs: Pytree, dtype=jnp.float32) -> Pytree:
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype),
+        specs,
+        is_leaf=lambda x: isinstance(x, PSpec),
+    )
+
+
+# ---------------------------------------------------------------------------
+# The model function bundle
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class ModelFns:
+    """Pure-function bundle implementing one architecture.
+
+    All functions are jit-compatible; ``params``/``cache`` are pytrees.
+    """
+
+    cfg: ModelConfig
+
+    # structure
+    param_specs: Pytree                       # nested dict of PSpec
+    cache_specs: Callable[..., Pytree]        # (batch, max_seq) -> dict of PSpec
+
+    # training path: batch -> (scalar loss, aux dict)
+    loss: Callable[[Pytree, dict], tuple[jax.Array, dict]]
+
+    # serving path
+    prefill: Callable[[Pytree, dict], tuple[jax.Array, Pytree]]
+    decode_step: Callable[[Pytree, Pytree, dict], tuple[jax.Array, Pytree]]
+
+    # inputs for each shape kind: returns dict of ShapeDtypeStruct
+    input_specs: Callable[[ShapeConfig], dict]
+
+    def init(self, rng: jax.Array, dtype=jnp.float32) -> Pytree:
+        return init_from_specs(self.param_specs, rng, dtype)
+
+    def param_axes(self) -> Pytree:
+        return axes_from_specs(self.param_specs)
+
+    def abstract_params(self, dtype=jnp.float32) -> Pytree:
+        return abstract_from_specs(self.param_specs, dtype)
+
+    def init_cache(self, batch: int, max_seq: int, dtype=jnp.bfloat16) -> Pytree:
+        specs = self.cache_specs(batch, max_seq)
+        return jax.tree.map(
+            lambda s: jnp.zeros(s.shape, _cache_dtype(s, dtype)),
+            specs,
+            is_leaf=lambda x: isinstance(x, PSpec),
+        )
+
+    def cache_axes(self, batch: int, max_seq: int) -> Pytree:
+        return axes_from_specs(self.cache_specs(batch, max_seq))
+
+    def abstract_cache(self, batch: int, max_seq: int, dtype=jnp.bfloat16) -> Pytree:
+        specs = self.cache_specs(batch, max_seq)
+        return jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, _cache_dtype(s, dtype)),
+            specs,
+            is_leaf=lambda x: isinstance(x, PSpec),
+        )
+
+
+def _cache_dtype(spec: PSpec, dtype):
+    # integer bookkeeping entries (positions) are marked with init="zeros"
+    # and axes ending in "null_i32"
+    if spec.axes and spec.axes[-1] == "null_i32":
+        return jnp.int32
+    if "state" in (spec.axes or ()):  # SSM states carried in f32
+        return jnp.float32
+    return dtype
+
+
+# ---------------------------------------------------------------------------
+# Shared input-spec builders
+# ---------------------------------------------------------------------------
+
+
+def lm_train_inputs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    return {
+        "tokens": jax.ShapeDtypeStruct((shape.global_batch, shape.seq_len), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((shape.global_batch, shape.seq_len), jnp.int32),
+    }
+
+
+def lm_prefill_inputs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    return {
+        "tokens": jax.ShapeDtypeStruct((shape.global_batch, shape.seq_len), jnp.int32),
+    }
+
+
+def lm_decode_inputs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    b = shape.global_batch
+    return {
+        "tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+        "positions": jax.ShapeDtypeStruct((b,), jnp.int32),
+    }
+
+
+def standard_input_specs(cfg: ModelConfig, shape: ShapeConfig, extra=None) -> dict:
+    if shape.kind == "train":
+        out = lm_train_inputs(cfg, shape)
+    elif shape.kind == "prefill":
+        out = lm_prefill_inputs(cfg, shape)
+    else:
+        out = lm_decode_inputs(cfg, shape)
+    if extra:
+        out.update(extra(cfg, shape))
+    return out
+
+
+def batch_axes_for(specs: dict) -> dict:
+    """Logical axes for input batches (tokens/labels/embeds/positions)."""
+    out = {}
+    for name, s in specs.items():
+        nd = len(s.shape)
+        if nd == 1:
+            out[name] = ("batch",)
+        elif nd == 2:
+            out[name] = ("batch", "seq")
+        elif nd == 3:
+            out[name] = ("batch", "seq", None)
+        else:
+            out[name] = ("batch",) + (None,) * (nd - 1)
+    return out

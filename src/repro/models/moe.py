@@ -1,0 +1,386 @@
+"""Token-choice top-k MoE transformers (granite-moe, deepseek-moe).
+
+Dispatch is the sort-based capacity scheme (the TPU-native "grouped GEMM"
+formulation): tokens are argsorted by expert id, ranked within their expert,
+scattered into an (experts, capacity, d_model) buffer, processed with batched
+expert einsums (MXU-friendly), and combined by weighted gather. Expert weights
+shard over the ``model`` axis (expert parallelism); the scatter/gather across
+the token-sharded ↔ expert-sharded boundary is where XLA inserts the
+all-to-all — exactly the EP communication pattern of real systems, visible to
+the roofline pass.
+
+DeepSeek-style details supported: shared experts (always-on), leading dense
+layers (``first_k_dense``), fine-grained experts, router aux load-balance loss.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, ShapeConfig
+from repro.kernels import ops
+from repro.models import layers as ll
+from repro.models.model_api import ModelFns, PSpec, standard_input_specs
+from repro.models.transformer import apply_remat
+from repro.parallel import tracing
+from repro.parallel.partition import shard
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+
+def moe_mlp_specs(cfg: ModelConfig, layers: int) -> dict:
+    d, E, f = cfg.d_model, cfg.n_experts, cfg.d_expert
+    lead, lax_ = (layers,), ("layers",)
+    specs = {
+        "router": PSpec(lead + (d, E), lax_ + ("embed", "experts"), init="small"),
+        "wg": PSpec(lead + (E, d, f), lax_ + ("experts", "embed_in", "expert_mlp")),
+        "wu": PSpec(lead + (E, d, f), lax_ + ("experts", "embed_in", "expert_mlp")),
+        "wd": PSpec(lead + (E, f, d), lax_ + ("experts", "expert_mlp", "embed_out")),
+        "ln": PSpec(lead + (d,), lax_ + ("embed",), init="ones"),
+    }
+    if cfg.n_shared_experts:
+        w = cfg.n_shared_experts * cfg.d_expert
+        specs["shared"] = {
+            k: v
+            for k, v in ll.mlp_specs(cfg, w, layers=layers).items()
+            if k != "ln"
+        }
+    return specs
+
+
+def build_specs(cfg: ModelConfig) -> dict:
+    n_moe = cfg.n_layers - cfg.first_k_dense
+    specs = {
+        **ll.embed_specs(cfg),
+        "moe_layers": {
+            "attn": ll.attn_specs(cfg, layers=n_moe),
+            "mlp": moe_mlp_specs(cfg, layers=n_moe),
+        },
+    }
+    if cfg.first_k_dense:
+        specs["dense_layers"] = {
+            "attn": ll.attn_specs(cfg, layers=cfg.first_k_dense),
+            "mlp": ll.mlp_specs(cfg, cfg.d_ff_dense or cfg.d_ff,
+                                layers=cfg.first_k_dense),
+        }
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# MoE MLP (sort-based capacity dispatch)
+# ---------------------------------------------------------------------------
+
+
+def _expert_mlp(p: dict, buf: jax.Array) -> jax.Array:
+    """buf (E, C, d) -> (E, C, d) through per-expert SwiGLU."""
+    g = jnp.einsum("ecd,edf->ecf", buf, ll.cast(p["wg"]))
+    u = jnp.einsum("ecd,edf->ecf", buf, ll.cast(p["wu"]))
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(g.dtype) * u
+    h = shard(h, "experts", None, "expert_mlp")
+    return jnp.einsum("ecf,efd->ecd", h, ll.cast(p["wd"]))
+
+
+def moe_mlp_forward_ep(p: dict, x: jax.Array, cfg: ModelConfig, mesh):
+    """Expert-parallel MoE via shard_map (§Perf beyond-paper optimization).
+
+    The pjit scatter path (below) routes tokens through a *globally*
+    expert-sharded (E, cap, d) buffer; because the scatter indices are
+    data-dependent, XLA cannot prove locality and materializes the buffer
+    with per-layer all-reduces (measured: 8.5 TB/device/step on
+    deepseek-moe-16b train_4k). Here routing is explicit:
+
+    - dispatch is LOCAL to each data shard (local top-k, local sort,
+      per-shard capacity) — zero communication;
+    - expert FFNs run model-sharded (each model rank holds E/16 experts
+      and reads only its slice of the local buffer);
+    - one all-gather over the model axis returns per-expert outputs
+      (E · C_local · d bytes — the algorithmic minimum for this layout);
+    - combine is local.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.moe_top_k
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    n_data = 1
+    for a in data_axes:
+        n_data *= mesh.shape[a]
+    has_model = "model" in mesh.axis_names and E % mesh.shape.get("model", 1) == 0
+    batch_spec = (data_axes if len(data_axes) > 1 else data_axes[0]) \
+        if data_axes and B % n_data == 0 else None
+    expert_spec = "model" if has_model else None
+
+    def body(router, wg, wu, wd, xl):
+        Bl, Sl, _ = xl.shape
+        Tl = Bl * Sl
+        xf = xl.reshape(Tl, d)
+        logits = jnp.einsum("td,de->te", xf.astype(jnp.float32),
+                            router.astype(jnp.float32))
+        probs = jax.nn.softmax(logits, axis=-1)
+        weights, sel = jax.lax.top_k(probs, k)
+        weights = weights / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)
+
+        counts = jnp.bincount(sel.reshape(-1), length=E)
+        frac = counts.astype(jnp.float32) / (Tl * k)
+        aux = E * jnp.sum(probs.mean(0) * frac)
+        if data_axes:
+            aux = jax.lax.pmean(aux, axis_name=data_axes)
+
+        cap = int(math.ceil(Tl * k * cfg.capacity_factor / E))
+        cap = max(8, min(cap, Tl))
+        e_flat = sel.reshape(-1)
+        order = jnp.argsort(e_flat, stable=True)
+        sorted_e = e_flat[order]
+        starts = jnp.cumsum(counts) - counts
+        rank = jnp.arange(Tl * k) - starts[sorted_e]
+        keep = rank < cap
+        rank_c = jnp.minimum(rank, cap - 1)
+        tok = order // k
+
+        vals = jnp.where(keep[:, None], xf[tok], 0).astype(ll.COMPUTE_DTYPE)
+        buf = jnp.zeros((E, cap, d), ll.COMPUTE_DTYPE)
+        buf = buf.at[sorted_e, rank_c].add(vals)        # local scatter
+
+        # expert FFN on the local expert slice (wg/wu/wd are (E/16,·,·))
+        e_local = wg.shape[0]
+        if expert_spec is not None:
+            midx = jax.lax.axis_index("model")
+            buf_l = jax.lax.dynamic_slice_in_dim(buf, midx * e_local,
+                                                 e_local, 0)
+        else:
+            buf_l = buf
+        g = jnp.einsum("ecd,edf->ecf", buf_l, ll.cast(wg))
+        u = jnp.einsum("ecd,edf->ecf", buf_l, ll.cast(wu))
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(g.dtype) * u
+        h = jnp.einsum("ecf,efd->ecd", h, ll.cast(wd))  # (E/16, cap, d)
+        if expert_spec is not None:
+            # the one unavoidable collective: per-expert outputs to all
+            h = jax.lax.all_gather(h, axis_name="model", axis=0,
+                                   tiled=True)          # (E, cap, d)
+
+        out_sorted = h[sorted_e, rank_c]
+        w_sorted = weights.reshape(-1)[order]
+        contrib = out_sorted * jnp.where(keep, w_sorted, 0.0)[:, None].astype(
+            out_sorted.dtype
+        )
+        y = jnp.zeros((Tl, d), ll.COMPUTE_DTYPE).at[tok].add(contrib)
+        return y.reshape(Bl, Sl, d), aux
+
+    shmap = jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(
+            P(None, None),                       # router replicated
+            P(expert_spec, None, None),          # wg (E, d, f)
+            P(expert_spec, None, None),          # wu
+            P(expert_spec, None, None),          # wd (E, f, d)
+            P(batch_spec, None, None),           # x
+        ),
+        out_specs=(P(batch_spec, None, None), P()),
+        check_vma=False,
+    )
+    y, aux = shmap(p["router"], p["wg"], p["wu"], p["wd"], x)
+    if cfg.n_shared_experts:
+        y = y + ll.mlp_forward(p["shared"], x.reshape(B * S, d), cfg
+                               ).reshape(B, S, d)
+    return y, aux
+
+
+def moe_mlp_forward(p: dict, x: jax.Array, cfg: ModelConfig):
+    """x (B, S, d) -> (out (B, S, d), aux load-balance loss)."""
+    if cfg.moe_impl == "ep" and x.shape[1] > 1:
+        from repro.parallel.partition import current_mesh
+
+        mesh = current_mesh()
+        if mesh is not None:
+            return moe_mlp_forward_ep(p, x, cfg, mesh)
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.moe_top_k
+    T = B * S
+    xf = x.reshape(T, d)
+
+    logits = jnp.einsum("td,de->te", xf.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                     # (T, E)
+    weights, sel = jax.lax.top_k(probs, k)                      # (T, k)
+    weights = weights / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)
+
+    # aux loss (Switch-style): E * Σ_e mean_prob_e * frac_tokens_e
+    counts = jnp.bincount(sel.reshape(-1), length=E)            # (E,)
+    frac = counts.astype(jnp.float32) / (T * k)
+    aux = E * jnp.sum(probs.mean(0) * frac)
+
+    # sort-based dispatch
+    cap = int(math.ceil(T * k * cfg.capacity_factor / E))
+    cap = max(8, min(cap, T))  # at least a tile, at most all tokens
+    e_flat = sel.reshape(-1)                                    # (T*k,)
+    order = jnp.argsort(e_flat, stable=True)
+    sorted_e = e_flat[order]
+    starts = jnp.cumsum(counts) - counts                        # (E,)
+    rank = jnp.arange(T * k) - starts[sorted_e]
+    keep = rank < cap
+    rank_c = jnp.minimum(rank, cap - 1)
+    tok = order // k                                            # source token ids
+
+    vals = jnp.where(keep[:, None], xf[tok], 0).astype(ll.COMPUTE_DTYPE)
+    buf = jnp.zeros((E, cap, d), ll.COMPUTE_DTYPE)
+    buf = buf.at[sorted_e, rank_c].add(vals)
+    buf = shard(buf, "experts", None, None)
+
+    h = _expert_mlp(p, buf)                                     # (E, C, d)
+
+    out_sorted = h[sorted_e, rank_c]                            # (T*k, d)
+    w_sorted = weights.reshape(-1)[order]
+    contrib = out_sorted * jnp.where(keep, w_sorted, 0.0)[:, None].astype(
+        out_sorted.dtype
+    )
+    y = jnp.zeros((T, d), ll.COMPUTE_DTYPE).at[tok].add(contrib)
+
+    if cfg.n_shared_experts:
+        y = y + ll.mlp_forward(p["shared"], xf, cfg)
+    return y.reshape(B, S, d), aux
+
+
+# ---------------------------------------------------------------------------
+# Blocks / entry points
+# ---------------------------------------------------------------------------
+
+
+def _moe_block(lp, x, cfg, positions):
+    h = ops.rmsnorm(x, lp["attn"]["ln"], cfg.norm_eps)
+    a, kv = ll.attn_forward(lp["attn"], h, cfg, positions)
+    x = x + a
+    h = ops.rmsnorm(x, lp["mlp"]["ln"], cfg.norm_eps)
+    y, aux = moe_mlp_forward(lp["mlp"], h, cfg)
+    return x + y, kv, aux
+
+
+def _dense_block(lp, x, cfg, positions):
+    h = ops.rmsnorm(x, lp["attn"]["ln"], cfg.norm_eps)
+    a, kv = ll.attn_forward(lp["attn"], h, cfg, positions)
+    x = x + a
+    h = ops.rmsnorm(x, lp["mlp"]["ln"], cfg.norm_eps)
+    return x + ll.mlp_forward(lp["mlp"], h, cfg), kv
+
+
+def _backbone(params, cfg, x, *, remat=True, collect_kv=False):
+    positions = jnp.arange(x.shape[1])
+    kvs = []
+
+    def maybe_kv(kv):
+        if not collect_kv:
+            return None
+        return (kv[0].astype(jnp.bfloat16), kv[1].astype(jnp.bfloat16))
+
+    if cfg.first_k_dense:
+        def dbody(carry, lp):
+            out, kv = _dense_block(lp, carry, cfg, positions)
+            return out, maybe_kv(kv)
+
+        if remat:
+            dbody = apply_remat(dbody, cfg)
+        x, dkv = jax.lax.scan(dbody, x, params["dense_layers"],
+                              unroll=tracing.scan_unroll())
+        kvs.append(dkv)
+
+    def mbody(carry, lp):
+        out, kv, aux = _moe_block(lp, carry, cfg, positions)
+        return out, (maybe_kv(kv), aux)
+
+    if remat:
+        mbody = apply_remat(mbody, cfg)
+    x, (mkv, auxs) = jax.lax.scan(mbody, x, params["moe_layers"],
+                                  unroll=tracing.scan_unroll())
+    kvs.append(mkv)
+    x = ops.rmsnorm(x, params["final_ln"], cfg.norm_eps)
+    if collect_kv:
+        # concatenate dense + moe layer caches along the layer axis
+        ks = jnp.concatenate([kv[0] for kv in kvs], 0) if len(kvs) > 1 else kvs[0][0]
+        vs = jnp.concatenate([kv[1] for kv in kvs], 0) if len(kvs) > 1 else kvs[0][1]
+        return x, {"k": ks, "v": vs}, auxs.mean()
+    return x, None, auxs.mean()
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    x = ll.embed_lookup(params, batch["tokens"])
+    hidden, _, aux = _backbone(params, cfg, x, remat=True)
+    loss, info = ll.lm_loss(params, hidden, batch["labels"], cfg)
+    info["router_aux"] = aux
+    return loss + cfg.router_aux_coef * aux, info
+
+
+def prefill_fn(params, batch, cfg: ModelConfig):
+    x = ll.embed_lookup(params, batch["tokens"])
+    hidden, cache, _ = _backbone(params, cfg, x, remat=False, collect_kv=True)
+    logits = ll.logits_last(params, hidden[:, -1], cfg)
+    return logits, cache
+
+
+def decode_fn(params, cache, batch, cfg: ModelConfig):
+    positions = batch["positions"]
+    x = ll.embed_lookup(params, batch["tokens"])
+    nd = cfg.first_k_dense
+
+    def dense_body(carry, xs):
+        lp, ck, cv = xs
+        h = ops.rmsnorm(carry, lp["attn"]["ln"], cfg.norm_eps)
+        a, ck, cv = ll.attn_decode(lp["attn"], h, cfg, positions, ck, cv)
+        y = carry + a
+        h = ops.rmsnorm(y, lp["mlp"]["ln"], cfg.norm_eps)
+        return y + ll.mlp_forward(lp["mlp"], h, cfg), (ck, cv)
+
+    def moe_body(carry, xs):
+        lp, ck, cv = xs
+        h = ops.rmsnorm(carry, lp["attn"]["ln"], cfg.norm_eps)
+        a, ck, cv = ll.attn_decode(lp["attn"], h, cfg, positions, ck, cv)
+        y = carry + a
+        h = ops.rmsnorm(y, lp["mlp"]["ln"], cfg.norm_eps)
+        z, _ = moe_mlp_forward(lp["mlp"], h, cfg)
+        return y + z, (ck, cv)
+
+    k, v = cache["k"], cache["v"]
+    new_k, new_v = [], []
+    if nd:
+        x, (dk, dv) = jax.lax.scan(
+            dense_body, x, (params["dense_layers"], k[:nd], v[:nd]),
+            unroll=tracing.scan_unroll(),
+        )
+        new_k.append(dk)
+        new_v.append(dv)
+    x, (mk, mv) = jax.lax.scan(moe_body, x, (params["moe_layers"], k[nd:], v[nd:]),
+                               unroll=tracing.scan_unroll())
+    new_k.append(mk)
+    new_v.append(mv)
+    x = ops.rmsnorm(x, params["final_ln"], cfg.norm_eps)
+    logits = ll.logits_last(params, x[:, 0], cfg)
+    ks = jnp.concatenate(new_k, 0) if len(new_k) > 1 else new_k[0]
+    vs = jnp.concatenate(new_v, 0) if len(new_v) > 1 else new_v[0]
+    return logits, {"k": ks, "v": vs}
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_seq: int) -> dict:
+    L, K, dh = cfg.n_layers, cfg.n_kv_heads, cfg.d_head
+    axes = ("layers", "batch", "seq_fallback", "kv_heads", "head_dim")
+    return {
+        "k": PSpec((L, batch, max_seq, K, dh), axes, init="zeros"),
+        "v": PSpec((L, batch, max_seq, K, dh), axes, init="zeros"),
+    }
+
+
+def make_model(cfg: ModelConfig) -> ModelFns:
+    return ModelFns(
+        cfg=cfg,
+        param_specs=build_specs(cfg),
+        cache_specs=functools.partial(cache_specs, cfg),
+        loss=functools.partial(loss_fn, cfg=cfg),
+        prefill=functools.partial(prefill_fn, cfg=cfg),
+        decode_step=functools.partial(decode_fn, cfg=cfg),
+        input_specs=functools.partial(standard_input_specs, cfg),
+    )

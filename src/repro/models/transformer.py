@@ -1,0 +1,202 @@
+"""Dense decoder-only transformer (phi4-mini, qwen3, smollm, minitron) and the
+LLaVA-NeXT VLM variant (stub anyres frontend + Mistral backbone).
+
+Layer stack is a ``lax.scan`` over layer-stacked parameters with full
+activation rematerialization in the loss path — this keeps the multi-pod HLO
+small and the per-device activation footprint to O(one layer).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, ShapeConfig
+from repro.kernels import ops
+from repro.models import layers as ll
+from repro.parallel import tracing
+from repro.models.model_api import (
+    ModelFns,
+    PSpec,
+    standard_input_specs,
+)
+
+VISION_D = 1024  # stub vision-tower embedding width (CLIP-like)
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+
+def build_specs(cfg: ModelConfig) -> dict:
+    L = cfg.n_layers
+    specs = {
+        **ll.embed_specs(cfg),
+        "layers": {
+            "attn": ll.attn_specs(cfg, layers=L),
+            "mlp": ll.mlp_specs(cfg, cfg.d_ff, layers=L),
+        },
+    }
+    if cfg.family == "vlm":
+        specs["mm_proj"] = PSpec((VISION_D, cfg.d_model), ("embed_in", "embed"))
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+
+def _residual_shard(x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Sequence parallelism: keep the residual stream sharded over the
+    model axis on the seq dim between blocks; XLA then materializes the
+    gather only where attention/MLP need full activations, and the
+    per-layer TP all-reduce becomes a reduce-scatter (§Perf)."""
+    from repro.parallel.partition import shard
+
+    if cfg.seq_parallel:
+        return shard(x, "batch", "seq_model", None)
+    return x
+
+
+def _block(lp: dict, x: jax.Array, cfg: ModelConfig, positions: jax.Array):
+    h = ops.rmsnorm(x, lp["attn"]["ln"], cfg.norm_eps)
+    a, kv = ll.attn_forward(lp["attn"], h, cfg, positions)
+    x = _residual_shard(x + a, cfg)
+    h = ops.rmsnorm(x, lp["mlp"]["ln"], cfg.norm_eps)
+    x = _residual_shard(x + ll.mlp_forward(lp["mlp"], h, cfg), cfg)
+    return x, kv
+
+
+def _block_decode(lp, ck, cv, x, cfg, positions):
+    h = ops.rmsnorm(x, lp["attn"]["ln"], cfg.norm_eps)
+    a, ck, cv = ll.attn_decode(lp["attn"], h, cfg, positions, ck, cv)
+    x = x + a
+    h = ops.rmsnorm(x, lp["mlp"]["ln"], cfg.norm_eps)
+    x = x + ll.mlp_forward(lp["mlp"], h, cfg)
+    return x, ck, cv
+
+
+def _embed_inputs(params, cfg: ModelConfig, batch: dict) -> jax.Array:
+    x = ll.embed_lookup(params, batch["tokens"])
+    if cfg.family == "vlm":
+        img = jnp.einsum(
+            "bsv,vd->bsd", ll.cast(batch["embeds"]), ll.cast(params["mm_proj"])
+        )
+        x = jnp.concatenate([img, x], axis=1)
+    return x
+
+
+def apply_remat(body, cfg: ModelConfig):
+    """Wrap a scanned layer body per the config's remat policy."""
+    if cfg.remat_policy == "none":
+        return body
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint(
+            body, policy=jax.checkpoint_policies.dots_saveable
+        )
+    return jax.checkpoint(body)   # "full": recompute everything
+
+
+def _backbone(params, cfg: ModelConfig, x: jax.Array, *, remat: bool = True):
+    positions = jnp.arange(x.shape[1])
+    x = _residual_shard(x, cfg)
+
+    def body(carry, lp):
+        out, _ = _block(lp, carry, cfg, positions)
+        return out, None
+
+    if remat:
+        body = apply_remat(body, cfg)
+    x, _ = jax.lax.scan(body, x, params["layers"], unroll=tracing.scan_unroll())
+    return ops.rmsnorm(x, params["final_ln"], cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# Entry points
+# ---------------------------------------------------------------------------
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    x = _embed_inputs(params, cfg, batch)
+    hidden = _backbone(params, cfg, x, remat=True)
+    if cfg.family == "vlm":
+        hidden = hidden[:, -batch["labels"].shape[1]:]
+    return ll.lm_loss(params, hidden, batch["labels"], cfg)
+
+
+def prefill_fn(params, batch, cfg: ModelConfig):
+    x = _embed_inputs(params, cfg, batch)
+    positions = jnp.arange(x.shape[1])
+
+    def body(carry, lp):
+        out, (k, v) = _block(lp, carry, cfg, positions)
+        return out, (k.astype(jnp.bfloat16), v.astype(jnp.bfloat16))
+
+    x, (ks, vs) = jax.lax.scan(body, x, params["layers"],
+                               unroll=tracing.scan_unroll())
+    x = ops.rmsnorm(x, params["final_ln"], cfg.norm_eps)
+    logits = ll.logits_last(params, x[:, -1], cfg)
+    return logits, {"k": ks, "v": vs}
+
+
+def decode_fn(params, cache, batch, cfg: ModelConfig):
+    positions = batch["positions"]
+    x = ll.embed_lookup(params, batch["tokens"])
+
+    def body(carry, xs):
+        lp, ck, cv = xs
+        out, ck, cv = _block_decode(lp, ck, cv, carry, cfg, positions)
+        return out, (ck, cv)
+
+    x, (ks, vs) = jax.lax.scan(body, x, (params["layers"], cache["k"], cache["v"]),
+                               unroll=tracing.scan_unroll())
+    x = ops.rmsnorm(x, params["final_ln"], cfg.norm_eps)
+    logits = ll.logits_last(params, x[:, 0], cfg)
+    return logits, {"k": ks, "v": vs}
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_seq: int) -> dict:
+    L, K, dh = cfg.n_layers, cfg.n_kv_heads, cfg.d_head
+    axes = ("layers", "batch", "seq_fallback", "kv_heads", "head_dim")
+    return {
+        "k": PSpec((L, batch, max_seq, K, dh), axes, init="zeros"),
+        "v": PSpec((L, batch, max_seq, K, dh), axes, init="zeros"),
+    }
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    def extra(cfg, shape):
+        if cfg.family != "vlm" or shape.kind == "decode":
+            return {}
+        b = shape.global_batch
+        return {
+            "embeds": jax.ShapeDtypeStruct(
+                (b, cfg.n_image_tokens, VISION_D), jnp.bfloat16
+            )
+        }
+
+    out = standard_input_specs(cfg, shape, extra)
+    # VLM: image positions consume part of the sequence budget
+    if cfg.family == "vlm" and shape.kind != "decode":
+        s_text = shape.seq_len - cfg.n_image_tokens
+        b = shape.global_batch
+        out["tokens"] = jax.ShapeDtypeStruct((b, s_text), jnp.int32)
+        if shape.kind == "train":
+            out["labels"] = jax.ShapeDtypeStruct((b, s_text), jnp.int32)
+    return out
+
+
+def make_model(cfg: ModelConfig) -> ModelFns:
+    return ModelFns(
+        cfg=cfg,
+        param_specs=build_specs(cfg),
+        cache_specs=functools.partial(cache_specs, cfg),
+        loss=functools.partial(loss_fn, cfg=cfg),
+        prefill=functools.partial(prefill_fn, cfg=cfg),
+        decode_step=functools.partial(decode_fn, cfg=cfg),
+        input_specs=functools.partial(input_specs, cfg),
+    )

@@ -1,0 +1,5 @@
+"""From-scratch optimizers (no optax in this environment)."""
+
+from repro.optim.adamw import adamw_init, adamw_update, global_norm, lr_schedule
+
+__all__ = ["adamw_init", "adamw_update", "global_norm", "lr_schedule"]

@@ -1,0 +1,80 @@
+"""AdamW with warmup+cosine schedule and global-norm clipping, from scratch.
+
+Optimizer state is a pytree mirroring the parameters (``mu``/``nu`` shard
+identically to their parameters under the partition rule engine).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import OptimConfig
+
+
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros_like(p)
+    return {
+        "mu": jax.tree.map(zeros, params),
+        "nu": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def lr_schedule(cfg: OptimConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    if cfg.schedule == "constant":
+        return cfg.learning_rate * warm
+    frac = jnp.clip(
+        (step - cfg.warmup_steps)
+        / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0,
+        1.0,
+    )
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+    return cfg.learning_rate * warm * (0.1 + 0.9 * cos)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+    )
+
+
+def clip_by_global_norm(tree, max_norm: float, norm: jax.Array):
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), tree)
+
+
+def adamw_update(params, grads, opt_state, cfg: OptimConfig):
+    """One AdamW step. Returns (new_params, new_opt_state, info)."""
+    step = opt_state["step"] + 1
+    norm = global_norm(grads)
+    grads = clip_by_global_norm(grads, cfg.grad_clip_norm, norm)
+    lr = lr_schedule(cfg, step)
+    b1, b2, eps, wd = cfg.b1, cfg.b2, cfg.eps, cfg.weight_decay
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        p32 = p.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        mhat = m / c1
+        vhat = v / c2
+        p_new = p32 - lr * (mhat / (jnp.sqrt(vhat) + eps) + wd * p32)
+        return p_new.astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(opt_state["mu"])
+    flat_v = jax.tree.leaves(opt_state["nu"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+    info = {"grad_norm": norm, "lr": lr}
+    return new_p, {"mu": new_m, "nu": new_v, "step": step}, info

@@ -1,0 +1,17 @@
+"""Distribution layer: logical-axis partitioning rules and collectives."""
+
+from repro.parallel.partition import (
+    activation_sharding,
+    shard,
+    spec_for_axes,
+    tree_partition_specs,
+    tree_shardings,
+)
+
+__all__ = [
+    "activation_sharding",
+    "shard",
+    "spec_for_axes",
+    "tree_partition_specs",
+    "tree_shardings",
+]

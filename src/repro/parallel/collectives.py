@@ -1,0 +1,39 @@
+"""Distributed-optimization helpers: gradient compression.
+
+``compress_grads`` implements stochastic-rounding int8 quantization of
+gradients (per-tensor absmax scale). Under data parallelism the gradient
+all-reduce moves ~4x fewer bytes when the reduction is performed on the
+quantized representation; in the pjit/auto-SPMD path we express it as
+quantize→dequantize around the (implicit) reduction so the numerics of the
+compressed collective are faithfully modeled and measurable in training
+quality, while the collective-bytes saving is realized when the step runs
+under ``shard_map`` (see EXPERIMENTS.md §Perf for the measured trade-off).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _quantize_int8(g: jax.Array, key: jax.Array) -> jax.Array:
+    gf = g.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+    scaled = gf / scale
+    # stochastic rounding
+    noise = jax.random.uniform(key, g.shape, jnp.float32) - 0.5
+    q = jnp.clip(jnp.round(scaled + noise), -127, 127).astype(jnp.int8)
+    return q.astype(jnp.float32) * scale
+
+
+def compress_grads(grads, rng: jax.Array, mode: str):
+    """Apply gradient compression. mode: "none" | "int8"."""
+    if mode == "none":
+        return grads
+    if mode != "int8":
+        raise ValueError(f"unknown compression mode {mode!r}")
+    leaves, treedef = jax.tree.flatten(grads)
+    keys = jax.random.split(rng, len(leaves))
+    return jax.tree.unflatten(
+        treedef, [_quantize_int8(g, k) for g, k in zip(leaves, keys)]
+    )

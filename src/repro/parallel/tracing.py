@@ -1,0 +1,37 @@
+"""Tracing-mode switches shared by model code.
+
+``exact_flops_mode`` — XLA's ``cost_analysis()`` counts a ``while`` loop
+body ONCE, not × trip-count, so any scanned program (layer stacks, flash
+attention kv loops, chunked losses/scans) under-reports FLOPs/bytes by
+large factors. For the roofline dry-run we trace with every ``lax.scan``
+unrolled (``unroll=True`` emits the body per step with no loop), making
+``cost_analysis`` exact. Normal execution keeps scans rolled (compile
+time, memory). Model code asks :func:`scan_unroll` at trace time.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+
+_EXACT_FLOPS: contextvars.ContextVar[bool] = contextvars.ContextVar(
+    "repro_exact_flops", default=False
+)
+
+
+@contextlib.contextmanager
+def exact_flops_mode(enabled: bool = True):
+    tok = _EXACT_FLOPS.set(enabled)
+    try:
+        yield
+    finally:
+        _EXACT_FLOPS.reset(tok)
+
+
+def exact_flops() -> bool:
+    return _EXACT_FLOPS.get()
+
+
+def scan_unroll() -> bool | int:
+    """Pass as ``jax.lax.scan(..., unroll=scan_unroll())``."""
+    return True if _EXACT_FLOPS.get() else 1

@@ -1,0 +1,13 @@
+"""Serving substrate: sharded KV caches + a batched request engine.
+
+A serving cloudlet runs one :class:`~repro.serving.engine.ServeEngine` per
+guest; the engine's full state (params handle, caches, slot bookkeeping)
+is snapshotable, so the ad hoc continuity protocol covers inference jobs
+exactly as it covers training jobs.
+"""
+
+from repro.serving.engine import Request, ServeEngine
+from repro.serving.kvcache import init_cache, scatter_slot, cache_shardings
+
+__all__ = ["ServeEngine", "Request", "init_cache", "scatter_slot",
+           "cache_shardings"]

@@ -1,0 +1,67 @@
+"""Sharded decode caches, generic over architecture families.
+
+Every model family exposes ``cache_specs(batch, max_seq)`` (KV tensors for
+attention models, conv+SSM states for Mamba, both for hybrids, self+cross
+for enc-dec). This module turns those specs into allocated/sharded caches
+and provides the slot-scatter primitive continuous batching needs: write a
+freshly prefilled (batch=1) cache into slot ``i`` of the engine cache.
+
+Sharding: the partition rule engine maps ``kv_heads → model`` when the
+head count divides the axis, else falls back to sequence sharding
+(``seq_fallback → model``) — how 500k-token caches fit one host group.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model_api import ModelFns
+from repro.parallel.partition import tree_shardings
+
+Pytree = Any
+
+
+def init_cache(model: ModelFns, n_slots: int, max_seq: int,
+               dtype=jnp.bfloat16) -> Pytree:
+    return model.init_cache(n_slots, max_seq, dtype)
+
+
+def cache_shardings(model: ModelFns, n_slots: int, max_seq: int, mesh,
+                    dtype=jnp.bfloat16) -> Pytree:
+    axes = model.cache_axes(n_slots, max_seq)
+    abstract = model.abstract_cache(n_slots, max_seq, dtype)
+    return tree_shardings(axes, abstract, mesh)
+
+
+def scatter_slot(cache: Pytree, slot_cache: Pytree, slot: jax.Array) -> Pytree:
+    """Write a batch-1 ``slot_cache`` into slot ``slot`` of ``cache``.
+
+    Cache leaves are laid out ``(layers, batch, ...)``; ``slot_cache``
+    leaves are ``(layers, 1, ...)`` and may be *shorter* than the engine
+    cache along trailing dims (e.g. prompt-length KV vs max_seq) — they
+    land at offset 0 of every trailing dim.
+    """
+
+    def put(c: jax.Array, s: jax.Array) -> jax.Array:
+        assert c.ndim == s.ndim, (c.shape, s.shape)
+        starts = [jnp.zeros((), jnp.int32)] * c.ndim
+        starts[1] = slot.astype(jnp.int32)
+        return jax.lax.dynamic_update_slice(c, s.astype(c.dtype), starts)
+
+    return jax.tree.map(put, cache, slot_cache)
+
+
+def expand_prefill_cache(prefill_cache: Pytree, like: Pytree) -> Pytree:
+    """Zero-pad a prefill cache's trailing dims up to the engine cache's
+    leaf shapes (batch dim must already match)."""
+
+    def pad(p: jax.Array, l: jax.Array) -> jax.Array:
+        assert p.ndim == l.ndim, (p.shape, l.shape)
+        pads = [(0, li - pi) for pi, li in zip(p.shape, l.shape)]
+        assert all(a >= 0 for _, a in pads), (p.shape, l.shape)
+        return jnp.pad(p, pads).astype(l.dtype)
+
+    return jax.tree.map(pad, prefill_cache, like)

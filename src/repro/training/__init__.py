@@ -1,0 +1,6 @@
+"""Training substrate: TrainState, step factory, fault-tolerant trainer."""
+
+from repro.training.state import TrainState, init_train_state
+from repro.training.step import make_train_step
+
+__all__ = ["TrainState", "init_train_state", "make_train_step"]

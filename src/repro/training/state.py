@@ -1,0 +1,66 @@
+"""TrainState: the checkpointable unit of the ad hoc cloud's "VM snapshot".
+
+A plain pytree (dict) so that serialization, sharding-spec derivation, and
+elastic resharding all go through generic tree walks:
+
+- ``params`` fp32 master weights (bf16 compute casts happen in the model),
+- ``opt``    AdamW moments + step,
+- ``rng``    jax PRNG key (uint32 data),
+- ``data_step`` int32 cursor of the deterministic data stream.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model_api import ModelFns
+from repro.optim import adamw_init
+
+TrainState = dict  # alias: state pytrees are plain dicts
+
+
+def init_train_state(model: ModelFns, seed: int = 0) -> TrainState:
+    rng = jax.random.key(seed)
+    params = model.init(rng)
+    return {
+        "params": params,
+        "opt": adamw_init(params),
+        "rng": jax.random.key_data(jax.random.fold_in(rng, 1)),
+        "data_step": jnp.zeros((), jnp.int32),
+    }
+
+
+def abstract_train_state(model: ModelFns) -> TrainState:
+    """ShapeDtypeStruct stand-ins (dry-run: no allocation)."""
+    params = model.abstract_params()
+    zeros_like = lambda t: jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), t
+    )
+    key_data = jax.eval_shape(
+        lambda: jax.random.key_data(jax.random.key(0))
+    )
+    return {
+        "params": params,
+        "opt": {
+            "mu": zeros_like(params),
+            "nu": zeros_like(params),
+            "step": jax.ShapeDtypeStruct((), jnp.int32),
+        },
+        "rng": jax.ShapeDtypeStruct(key_data.shape, key_data.dtype),
+        "data_step": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def train_state_axes(model: ModelFns) -> Any:
+    """Logical-axis tree matching the TrainState structure."""
+    paxes = model.param_axes()
+    scalar = ()
+    return {
+        "params": paxes,
+        "opt": {"mu": paxes, "nu": paxes, "step": scalar},
+        "rng": ("null",),
+        "data_step": scalar,
+    }

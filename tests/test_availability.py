@@ -1,0 +1,41 @@
+"""Availability checker: the paper's 2-minute rule (§III-A)."""
+
+from repro.core.availability import AvailabilityChecker
+
+
+def test_host_fails_after_timeout():
+    ac = AvailabilityChecker(failure_timeout=120.0)
+    ac.record_poll("h", 0.0)
+    assert ac.check(60.0) == []            # polled 60 s ago: fine
+    assert ac.check(120.0) == []           # exactly at the boundary: fine
+    assert ac.check(121.0) == ["h"]        # over 2 min silent: failed
+    assert not ac.is_available("h")
+    assert ac.check(200.0) == []           # only reported once
+
+
+def test_poll_resets_the_clock_and_revives():
+    ac = AvailabilityChecker(failure_timeout=120.0)
+    ac.record_poll("h", 0.0)
+    ac.record_poll("h", 100.0)
+    assert ac.check(219.0) == []
+    assert ac.check(221.0) == ["h"]
+    ac.record_poll("h", 300.0)             # host came back
+    assert ac.is_available("h")
+    assert ac.available_hosts() == ["h"]
+
+
+def test_multiple_hosts_independent():
+    ac = AvailabilityChecker(failure_timeout=120.0)
+    ac.record_poll("a", 0.0)
+    ac.record_poll("b", 50.0)
+    assert ac.check(130.0) == ["a"]
+    assert ac.available_hosts() == ["b"]
+
+
+def test_state_round_trip():
+    ac = AvailabilityChecker()
+    ac.record_poll("a", 5.0)
+    ac.record_poll("b", 6.0)
+    ac.check(1000.0)
+    ac2 = AvailabilityChecker.from_state(ac.to_state())
+    assert set(ac2.available_hosts()) == set(ac.available_hosts())

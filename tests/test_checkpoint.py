@@ -1,0 +1,140 @@
+"""Checkpoint subsystem: stores, replicated placement, restore."""
+
+import numpy as np
+import pytest
+
+from repro.checkpoint.replicated import ReplicatedCheckpointManager
+from repro.checkpoint.serializer import deserialize_tree, serialize_tree
+from repro.checkpoint.store import DiskStore, SnapshotStore
+
+
+def small_state(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "params": {
+            "w": rng.standard_normal((8, 8)).astype(np.float32),
+            "b": rng.standard_normal((8,)).astype(np.float32),
+        },
+        "opt": {"mu": rng.standard_normal((8, 8)).astype(np.float32),
+                 "step": np.asarray(7, np.int32)},
+        "rng": rng.integers(0, 2 ** 31, size=(2,)).astype(np.uint32),
+    }
+
+
+class TestStores:
+    def test_put_get_delete(self):
+        s = SnapshotStore()
+        assert s.put("a", b"xyz")
+        assert s.get("a") == b"xyz"
+        assert "a" in s
+        s.delete("a")
+        assert s.get("a") is None
+
+    def test_capacity_and_overwrite(self):
+        s = SnapshotStore(capacity_bytes=10)
+        assert s.put("a", b"12345")
+        assert not s.put("b", b"1234567")     # would exceed 10 bytes
+        assert s.put("a", b"1234567890")      # overwrite replaces, fits
+        assert s.used_bytes == 10
+
+    def test_keep_only_latest_semantics(self):
+        s = SnapshotStore()
+        s.put("job0", b"v1")
+        s.put("job0", b"version-two")
+        assert s.get("job0") == b"version-two"
+
+    def test_disk_store_round_trip(self, tmp_path):
+        d = DiskStore(str(tmp_path / "snaps"))
+        d.put("job/0", b"abc")
+        d2 = DiskStore(str(tmp_path / "snaps"))  # reload from disk
+        assert d2.get("job/0") == b"abc"
+        d2.delete("job/0")
+        assert DiskStore(str(tmp_path / "snaps")).get("job/0") is None
+
+
+class TestReplicatedManager:
+    def make(self, hosts=("a", "b", "c", "d"), owners=("a", "b"), **kw):
+        stores = {h: SnapshotStore() for h in hosts}
+        mgr = ReplicatedCheckpointManager(
+            "job0", list(owners), stores, **kw
+        )
+        return mgr, stores
+
+    def fail_probs(self, hosts, p=0.05):
+        return {h: p for h in hosts}
+
+    def test_save_and_restore(self):
+        mgr, stores = self.make()
+        state = small_state()
+        rec = mgr.save(
+            state, step=13,
+            fail_prob=self.fail_probs(stores),
+            available=set(stores),
+        )
+        assert rec.complete
+        out = mgr.restore(state, surviving=set(stores))
+        assert out is not None
+        got, step = out
+        assert step == 13
+        np.testing.assert_array_equal(got["params"]["w"],
+                                      state["params"]["w"])
+
+    def test_restore_survives_owner_loss(self):
+        mgr, stores = self.make()
+        state = small_state()
+        mgr.save(state, 5, fail_prob=self.fail_probs(stores),
+                 available=set(stores))
+        surviving = {"c", "d"}           # both owners died
+        if mgr.survival_ok(surviving):
+            got, _ = mgr.restore(state, surviving=surviving)
+            np.testing.assert_array_equal(got["opt"]["mu"],
+                                          state["opt"]["mu"])
+
+    def test_restore_fails_when_all_replicas_lost(self):
+        mgr, stores = self.make(hosts=("a", "b"), owners=("a", "b"))
+        state = small_state()
+        mgr.save(state, 5, fail_prob=self.fail_probs(stores),
+                 available=set(stores))
+        assert mgr.restore(state, surviving=set()) is None
+        assert not mgr.survival_ok(set())
+
+    def test_drop_host_and_forget(self):
+        mgr, stores = self.make()
+        state = small_state()
+        mgr.save(state, 5, fail_prob=self.fail_probs(stores),
+                 available=set(stores))
+        mgr.drop_host("a")
+        for pl in mgr.latest.placements:
+            assert "a" not in pl.receivers
+        mgr.forget()
+        assert mgr.latest is None
+        assert all(s.used_bytes == 0 for h, s in stores.items())
+
+    def test_sharding_balances_bytes(self):
+        mgr, stores = self.make(owners=("a", "b", "c"))
+        state = small_state()
+        from repro.checkpoint.serializer import split_into_shards
+
+        blobs = split_into_shards(state, 3)
+        sizes = sorted(len(b) for b in blobs)
+        assert sizes[-1] <= sizes[0] * 3 + 512   # roughly balanced
+
+
+class TestSerializerEdgeCases:
+    def test_scalar_and_empty_shapes(self):
+        tree = {"s": np.asarray(3.5, np.float32),
+                "z": np.zeros((0, 4), np.int32)}
+        out = deserialize_tree(serialize_tree(tree), tree)
+        assert float(out["s"]) == 3.5
+        assert out["z"].shape == (0, 4)
+
+    def test_wrong_structure_rejected(self):
+        tree = {"a": np.zeros(3, np.float32)}
+        blob = serialize_tree(tree)
+        with pytest.raises((KeyError, AssertionError)):
+            deserialize_tree(blob, {"b": np.zeros(3, np.float32)})
+
+    def test_no_pickle_in_format(self):
+        blob = serialize_tree({"a": np.zeros(3, np.float32)})
+        assert b"pickle" not in blob
+        assert blob[4:5] == b"["  # JSON header right after length

@@ -1,0 +1,87 @@
+"""End-to-end ad hoc cloud simulation (the paper-§IV experiment harness)."""
+
+import pytest
+
+from repro.core.cloud import AdHocCloudSim, SimParams
+from repro.core.events import constant_failure_trace, nagios_like_trace
+from repro.core.server import JobState
+
+
+def test_jobs_complete_on_a_quiet_fleet():
+    sim = AdHocCloudSim(SimParams(n_hosts=5, seed=0))
+    sim.submit(work_units=300.0, n_jobs=3)
+    stats = sim.run_until_settled(3600.0)
+    assert stats["completion_rate"] == 1.0
+    assert stats["restores"] == 0
+    # makespan ≈ work + snapshot pauses, no restarts
+    assert stats["max_makespan"] < 600.0
+
+
+def test_failure_restores_from_snapshot_and_finishes():
+    p = SimParams(n_hosts=6, seed=1, snapshot_interval_s=60.0)
+    sim = AdHocCloudSim(p)
+    # the running host dies at t=400 and stays down
+    trace = constant_failure_trace(
+        sim.host_ids, {"host000": [400.0]}, 7200.0, recovery=7000.0
+    )
+    sim.apply_trace(trace)
+    sim.submit(work_units=900.0, n_jobs=1)
+    stats = sim.run_until_settled(7200.0)
+    job = next(iter(sim.server.jobs.values()))
+    assert job.state == JobState.COMPLETED
+    if job.assigned_host is not None and stats["restores"]:
+        assert job.assigned_host != "host000"
+    # work preserved: restores (not restarts) if the initial host ran it
+    assert stats["restores"] + stats["restarts_from_zero"] >= 0
+
+
+def test_continuity_beats_boinc_restart_baseline():
+    """The paper's core claim: snapshots make unreliable hosts usable."""
+
+    def run(continuity: bool):
+        p = SimParams(
+            n_hosts=12, seed=3, continuity=continuity,
+            snapshot_interval_s=120.0, guest_fail_per_hour=1.0,
+        )
+        sim = AdHocCloudSim(p)
+        sim.apply_trace(nagios_like_trace(
+            12, 2 * 3600.0, seed=11, mean_uptime=1200.0))
+        sim.submit(work_units=1500.0, n_jobs=8)
+        return sim.run_until_settled(6 * 3600.0)
+
+    with_cont = run(True)
+    baseline = run(False)
+    assert with_cont["completion_rate"] >= baseline["completion_rate"]
+    # continuity converts from-scratch restarts into snapshot restores
+    assert with_cont["restores"] > 0
+    assert baseline["restores"] == 0
+    if baseline["mean_makespan"] and with_cont["mean_makespan"]:
+        assert with_cont["mean_makespan"] <= baseline["mean_makespan"] * 1.05
+
+
+def test_interference_suspends_guest():
+    """Resource monitor suspends the guest while the host user is busy."""
+    # host000's user hammers the machine between t=100 and t=400
+    load = {"host000": lambda now: 1.0 if 100.0 <= now < 400.0 else 0.0}
+    p = SimParams(n_hosts=1, seed=0, continuity=False)
+    sim = AdHocCloudSim(p, host_load_fns=load)
+    sim.submit(work_units=600.0, n_jobs=1)
+    stats = sim.run_until_settled(3600.0)
+    assert stats["completion_rate"] == 1.0
+    events = [e for _, e, _ in sim.server.log
+              if e in ("guest_suspended", "guest_resumed")]
+    assert "guest_suspended" in events and "guest_resumed" in events
+    # suspended time pushes the makespan well past the pure work time
+    assert stats["max_makespan"] > 800.0
+
+
+def test_snapshot_placement_respects_cloudlet_scope():
+    p = SimParams(n_hosts=4, seed=0)
+    sim = AdHocCloudSim(p)
+    # a second cloudlet exists with a disjoint host (registered manually)
+    sim.server.create_cloudlet("other", "othersvc")
+    sim.server.register_host("outsider", 0.0, cloudlets=["other"])
+    sim.submit(work_units=500.0, n_jobs=1)
+    sim.run(1000.0)
+    for meta in sim.server.snapshots.latest.values():
+        assert "outsider" not in meta.locations

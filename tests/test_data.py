@@ -1,0 +1,68 @@
+"""Data pipeline: determinism + cursor-checkpoint semantics."""
+
+import numpy as np
+
+from repro.configs import REDUCED
+from repro.data.synthetic import SyntheticDataset
+
+
+def test_batch_is_pure_function_of_step():
+    cfg = REDUCED["qwen3-8b"]
+    ds1 = SyntheticDataset(cfg, 32, 4, seed=5)
+    ds2 = SyntheticDataset(cfg, 32, 4, seed=5)
+    for step in (0, 3, 17):
+        b1, b2 = ds1.batch(step), ds2.batch(step)
+        np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+        np.testing.assert_array_equal(b1["labels"], b2["labels"])
+
+
+def test_restore_mid_stream_is_exact():
+    """Reading steps [k..n) after a 'restore' equals reading them straight
+    through — the property the trainer's bit-exact resume relies on."""
+    cfg = REDUCED["smollm-360m"]
+    ds = SyntheticDataset(cfg, 16, 2, seed=1)
+    straight = [ds.batch(i)["tokens"] for i in range(6)]
+    restored = SyntheticDataset(cfg, 16, 2, seed=1)
+    resumed = [restored.batch(i)["tokens"] for i in range(3, 6)]
+    for a, b in zip(straight[3:], resumed):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_steps_differ_and_labels_shift():
+    cfg = REDUCED["qwen3-8b"]
+    ds = SyntheticDataset(cfg, 64, 2, seed=0)
+    b0, b1 = ds.batch(0), ds.batch(1)
+    assert not np.array_equal(b0["tokens"], b1["tokens"])
+    # labels are the next-token shift of the same underlying stream
+    np.testing.assert_array_equal(b0["tokens"][:, 1:], b0["labels"][:, :-1])
+
+
+def test_learnable_structure():
+    """Affine-recurrence streams have low conditional entropy: the same
+    (prev -> next) mapping repeats within a row."""
+    cfg = REDUCED["smollm-360m"]
+    ds = SyntheticDataset(cfg, 512, 1, seed=2, noise=0.0)
+    b = ds.batch(0)
+    toks, labels = b["tokens"][0], b["labels"][0]
+    mapping = {}
+    consistent = 0
+    for t, l in zip(toks, labels):
+        if t in mapping:
+            consistent += mapping[t] == l
+        mapping[t] = l
+    repeats = sum(1 for t in set(toks) if list(toks).count(t) > 1)
+    if repeats:
+        assert consistent > 0
+
+
+def test_modality_extras():
+    vcfg = REDUCED["llava-next-mistral-7b"]
+    ds = SyntheticDataset(vcfg, 32, 2, seed=0)
+    b = ds.batch(0)
+    assert b["embeds"].shape == (2, vcfg.n_image_tokens, 1024)
+    assert b["tokens"].shape == (2, 32 - vcfg.n_image_tokens)
+
+    wcfg = REDUCED["whisper-medium"]
+    ds = SyntheticDataset(wcfg, 32, 2, seed=0)
+    b = ds.batch(0)
+    assert b["frames"].shape == (2, 32, wcfg.d_model)

@@ -1,0 +1,182 @@
+"""Pallas kernel sweeps: shapes × dtypes vs the pure-jnp oracles.
+
+All kernels run in ``interpret=True`` (CPU) and must match ``ref.py``
+within dtype-appropriate tolerances.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.rmsnorm import rmsnorm
+from repro.kernels.selective_scan import selective_scan
+from repro.kernels.ssd import ssd
+
+RNG = np.random.default_rng(42)
+
+
+def rand(shape, dtype, scale=1.0):
+    return jnp.asarray(RNG.standard_normal(shape) * scale, dtype)
+
+
+def tol(dtype):
+    return dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 else \
+        dict(atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "shape", [(2, 16, 33), (1, 7, 64), (3, 5, 960), (2, 1, 128)]
+)
+def test_rmsnorm(shape, dtype):
+    x = rand(shape, dtype)
+    w = rand(shape[-1:], jnp.float32)
+    got = rmsnorm(x, w, 1e-5, block_rows=8, interpret=True)
+    want = ref.rmsnorm(x, w, 1e-5)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **tol(dtype)
+    )
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,sq,sk,h,k,d,causal,q_off",
+    [
+        (2, 32, 32, 4, 2, 16, True, 0),     # GQA causal square
+        (1, 17, 63, 5, 1, 8, True, 46),     # ragged + offset (suffix decode)
+        (2, 8, 40, 8, 8, 32, False, 0),     # MHA non-causal cross-attn
+        (1, 64, 64, 2, 2, 128, True, 0),    # full head_dim tile
+    ],
+)
+def test_flash_attention(b, sq, sk, h, k, d, causal, q_off, dtype):
+    q = rand((b, sq, h, d), dtype)
+    kk = rand((b, sk, k, d), dtype)
+    v = rand((b, sk, k, d), dtype)
+    got = flash_attention(q, kk, v, causal=causal, q_offset=q_off,
+                          block_q=16, block_k=16, interpret=True)
+    want = ref.attention(q, kk, v, causal=causal, q_offset=q_off)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **tol(dtype)
+    )
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,s,h,k,d",
+    [(2, 64, 4, 2, 16), (3, 100, 8, 8, 32), (1, 48, 16, 2, 128)],
+)
+def test_decode_attention(b, s, h, k, d, dtype):
+    q = rand((b, h, d), dtype)
+    kk = rand((b, s, k, d), dtype)
+    v = rand((b, s, k, d), dtype)
+    lens = jnp.asarray(RNG.integers(1, s + 1, b), jnp.int32)
+    got = decode_attention(q, kk, v, lens, block_k=16, interpret=True)
+    want = ref.decode_attention(q, kk, v, lens)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **tol(dtype)
+    )
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,s,di,n,chunk,bc",
+    [(2, 40, 24, 8, 16, 16), (1, 16, 128, 16, 8, 64), (2, 7, 8, 4, 16, 8)],
+)
+def test_selective_scan(b, s, di, n, chunk, bc, dtype):
+    x = rand((b, s, di), dtype, 0.5)
+    dt = jnp.asarray(np.abs(RNG.standard_normal((b, s, di))) * 0.1, dtype)
+    A = jnp.asarray(-np.abs(RNG.standard_normal((di, n))) - 0.1, jnp.float32)
+    Bm = rand((b, s, n), dtype, 0.5)
+    C = rand((b, s, n), dtype, 0.5)
+    D = rand((di,), jnp.float32)
+    h0 = rand((b, di, n), jnp.float32, 0.1)
+    y, hT = selective_scan(x, dt, A, Bm, C, D, h0, chunk=chunk,
+                           block_channels=bc, interpret=True)
+    yw, hw = ref.selective_scan(x, dt, A, Bm, C, D, h0)
+    np.testing.assert_allclose(
+        np.asarray(y, np.float32), np.asarray(yw, np.float32), **tol(dtype)
+    )
+    np.testing.assert_allclose(np.asarray(hT), np.asarray(hw),
+                               atol=5e-3, rtol=5e-3)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,s,hs,p,n,chunk",
+    [(2, 48, 3, 16, 8, 16), (1, 16, 8, 64, 16, 8), (2, 5, 2, 8, 4, 16)],
+)
+def test_ssd(b, s, hs, p, n, chunk, dtype):
+    x = rand((b, s, hs, p), dtype, 0.5)
+    dt = jnp.asarray(np.abs(RNG.standard_normal((b, s, hs))) * 0.1, dtype)
+    A = jnp.asarray(-np.abs(RNG.standard_normal((hs,))) - 0.1, jnp.float32)
+    Bm = rand((b, s, n), dtype, 0.5)
+    C = rand((b, s, n), dtype, 0.5)
+    D = rand((hs,), jnp.float32)
+    h0 = rand((b, hs, p, n), jnp.float32, 0.1)
+    y, hT = ssd(x, dt, A, Bm, C, D, h0, chunk=chunk, interpret=True)
+    yw, hw = ref.ssd(x, dt, A, Bm, C, D, h0)
+    np.testing.assert_allclose(
+        np.asarray(y, np.float32), np.asarray(yw, np.float32), **tol(dtype)
+    )
+    np.testing.assert_allclose(np.asarray(hT), np.asarray(hw),
+                               atol=5e-3, rtol=5e-3)
+
+
+class TestXlaPathMatchesOracle:
+    """The XLA fallbacks in ops.py are algorithmically identical blocked
+    implementations — they must match the oracles too."""
+
+    def test_flash_xla(self):
+        from repro.kernels import ops
+
+        q = rand((2, 37, 6, 16), jnp.float32)
+        k = rand((2, 37, 2, 16), jnp.float32)
+        v = rand((2, 37, 2, 16), jnp.float32)
+        with ops.use_backend("xla"):
+            got = ops.attention(q, k, v, causal=True, block_q=16, block_k=16)
+        want = ref.attention(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=2e-5, rtol=2e-5)
+
+    def test_scan_chunked_xla(self):
+        from repro.kernels import ops
+
+        b, s, di, n = 2, 50, 12, 6
+        x = rand((b, s, di), jnp.float32, 0.5)
+        dt = jnp.asarray(np.abs(RNG.standard_normal((b, s, di))) * 0.1,
+                         jnp.float32)
+        A = jnp.asarray(-np.abs(RNG.standard_normal((di, n))) - 0.1,
+                        jnp.float32)
+        Bm = rand((b, s, n), jnp.float32, 0.5)
+        C = rand((b, s, n), jnp.float32, 0.5)
+        D = rand((di,), jnp.float32)
+        with ops.use_backend("xla"):
+            y, hT = ops.selective_scan(x, dt, A, Bm, C, D, chunk=16)
+        yw, hw = ref.selective_scan(x, dt, A, Bm, C, D)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(yw),
+                                   atol=1e-4, rtol=1e-4)
+        np.testing.assert_allclose(np.asarray(hT), np.asarray(hw),
+                                   atol=1e-4, rtol=1e-4)
+
+    def test_ssd_chunked_xla(self):
+        from repro.kernels import ops
+
+        b, s, hs, p, n = 1, 33, 2, 8, 4
+        x = rand((b, s, hs, p), jnp.float32, 0.5)
+        dt = jnp.asarray(np.abs(RNG.standard_normal((b, s, hs))) * 0.1,
+                         jnp.float32)
+        A = jnp.asarray(-np.abs(RNG.standard_normal((hs,))) - 0.1, jnp.float32)
+        Bm = rand((b, s, n), jnp.float32, 0.5)
+        C = rand((b, s, n), jnp.float32, 0.5)
+        D = rand((hs,), jnp.float32)
+        with ops.use_backend("xla"):
+            y, hT = ops.ssd(x, dt, A, Bm, C, D, chunk=16)
+        yw, hw = ref.ssd(x, dt, A, Bm, C, D)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(yw),
+                                   atol=1e-4, rtol=1e-4)
+        np.testing.assert_allclose(np.asarray(hT), np.asarray(hw),
+                                   atol=1e-4, rtol=1e-4)

@@ -1,0 +1,120 @@
+"""Partition rule engine: logical axes → mesh PartitionSpecs."""
+
+import numpy as np
+import pytest
+import jax
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.parallel.partition import spec_for_axes
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    # 1 real device, but Mesh only needs the layout for spec resolution;
+    # use a fake 2D shape via device repetition is not allowed, so build
+    # the spec tests against a (1,1) mesh with the production axis NAMES
+    # and a synthetic Mesh for divisibility logic.
+    dev = np.array(jax.devices()[:1]).reshape(1, 1)
+    return Mesh(dev, ("data", "model"))
+
+
+class FakeMesh:
+    """Shape-only stand-in (spec_for_axes touches .shape/.axis_names)."""
+
+    def __init__(self, **axes):
+        self.shape = dict(axes)
+        self.axis_names = tuple(axes)
+
+
+PROD = FakeMesh(data=16, model=16)
+MULTI = FakeMesh(pod=2, data=16, model=16)
+
+
+class TestPrimaryDims:
+    def test_heads_take_model(self):
+        spec = spec_for_axes(
+            ("batch", "seq", "heads", "head_dim"), (256, 4096, 32, 128), PROD
+        )
+        assert spec == P("data", None, "model", None)
+
+    def test_indivisible_heads_fall_back_to_row_parallel(self):
+        # smollm: 15 heads don't divide 16 -> wq shards embed_in instead
+        spec = spec_for_axes(
+            ("embed_in", "heads", "head_dim"), (960, 15, 64), PROD
+        )
+        assert spec == P("model", None, None)
+
+    def test_mlp_shards(self):
+        spec = spec_for_axes(("embed_in", "mlp"), (4096, 12288), PROD)
+        assert spec == P(None, "model")
+
+    def test_experts_shard(self):
+        spec = spec_for_axes(
+            ("experts", "embed_in", "expert_mlp"), (64, 2048, 1408), PROD
+        )
+        assert spec == P("model", None, None)
+
+    def test_only_one_dim_takes_model(self):
+        spec = spec_for_axes(("vocab", "embed_model"), (49152, 960), PROD)
+        assert spec in (P("model", None), P(None, "model"))
+        assert [s for s in spec if s == "model"].count("model") == 1
+
+
+class TestBatchAxis:
+    def test_batch_takes_pod_and_data(self):
+        spec = spec_for_axes(("batch", "seq"), (256, 4096), MULTI)
+        assert spec == P(("pod", "data"), None)
+
+    def test_batch_falls_back_to_data_only(self):
+        # batch 16 divides data(16) but not pod*data(32)
+        spec = spec_for_axes(("batch", "seq"), (16, 128), MULTI)
+        assert spec == P("data", None)
+
+    def test_batch_1_replicated(self):
+        spec = spec_for_axes(("batch", "seq"), (1, 524288), MULTI)
+        assert spec == P(None, None)
+
+
+class TestCacheFallback:
+    def test_kv_heads_preferred(self):
+        spec = spec_for_axes(
+            ("layers", "batch", "seq_fallback", "kv_heads", "head_dim"),
+            (36, 128, 32768, 32, 128),
+            PROD,
+        )
+        assert spec == P(None, "data", None, "model", None)
+
+    def test_seq_shard_when_kv_heads_indivisible(self):
+        # 5 kv heads (smollm) -> sequence dim takes the model axis
+        spec = spec_for_axes(
+            ("layers", "batch", "seq_fallback", "kv_heads", "head_dim"),
+            (32, 128, 32768, 5, 64),
+            PROD,
+        )
+        assert spec == P(None, "data", "model", None, None)
+
+    def test_never_dims_stay_unsharded(self):
+        spec = spec_for_axes(
+            ("layers", "state", "conv", "head_dim"), (64, 16, 4, 128), PROD
+        )
+        assert spec == P(None, None, None, None)
+
+
+class TestRealMeshIntegration:
+    def test_named_sharding_construction(self, mesh):
+        from repro.parallel.partition import tree_shardings
+
+        axes = {"w": ("embed_in", "mlp"), "b": ("mlp",)}
+        abstract = {
+            "w": jax.ShapeDtypeStruct((8, 4), np.float32),
+            "b": jax.ShapeDtypeStruct((4,), np.float32),
+        }
+        sh = tree_shardings(axes, abstract, mesh)
+        assert sh["w"].mesh.axis_names == ("data", "model")
+
+    def test_shard_noop_without_mesh(self):
+        from repro.parallel.partition import shard
+
+        x = jax.numpy.ones((4, 4))
+        np.testing.assert_array_equal(np.asarray(shard(x, "batch", None)),
+                                      np.ones((4, 4)))

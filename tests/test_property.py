@@ -1,0 +1,163 @@
+"""Hypothesis property tests for the system's invariants."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.reliability import host_reliability
+from repro.core.snapshot import joint_failure_probability, select_receivers
+from repro.checkpoint.serializer import (
+    deserialize_tree,
+    join_shards,
+    serialize_tree,
+    split_into_shards,
+)
+from repro.training.straggler import rebalance_microbatches, step_time_sync
+
+
+# ---------------------------------------------------------------------------
+# Reliability formula
+# ---------------------------------------------------------------------------
+
+
+@given(ca=st.integers(0, 1000), cc=st.integers(0, 1000),
+       nf=st.integers(0, 1000))
+def test_reliability_bounded(ca, cc, nf):
+    cc = min(cc, ca)  # can't complete more than assigned
+    r = host_reliability(ca, cc, nf)
+    assert 0.0 <= r <= 100.0
+
+
+@given(ca=st.integers(1, 100), cc=st.integers(0, 100), nf=st.integers(1, 100))
+def test_reliability_monotone_in_completions(ca, cc, nf):
+    ca2 = ca + 1
+    cc = min(cc, ca)
+    if nf in (ca, ca2):  # piecewise edges excluded
+        return
+    r1 = host_reliability(ca2, cc, nf)
+    r2 = host_reliability(ca2, min(cc + 1, ca2), nf)
+    assert r2 >= r1
+
+
+# ---------------------------------------------------------------------------
+# Snapshot placement
+# ---------------------------------------------------------------------------
+
+
+probs = st.floats(0.0, 1.0, allow_nan=False)
+
+
+@given(st.lists(probs, max_size=12))
+def test_joint_probability_in_unit_interval(ps):
+    j = joint_failure_probability(ps)
+    assert 0.0 <= j <= 1.0
+    if ps:
+        assert j <= max(ps) + 1e-12
+
+
+@given(st.lists(probs, min_size=1, max_size=20), st.floats(0.001, 0.5))
+def test_select_receivers_minimal_satisfying_prefix(ps, target):
+    hosts = [f"h{i}" for i in range(len(ps))]
+    fp = dict(zip(hosts, ps))
+    ranked = sorted(hosts, key=lambda h: fp[h])
+    recv, joint = select_receivers(ranked, fp, target=target,
+                                   max_receivers=len(hosts))
+    assert recv == ranked[: len(recv)]       # a prefix of the ranking
+    assert joint == joint_failure_probability([fp[h] for h in recv])
+    if joint <= target and len(recv) > 1:
+        # minimality: dropping the last receiver violates the bound
+        shorter = joint_failure_probability([fp[h] for h in recv[:-1]])
+        assert shorter > target
+    if joint > target:
+        # only permissible when every candidate was taken (or capped)
+        assert len(recv) == len(hosts)
+
+
+# ---------------------------------------------------------------------------
+# Serializer round-trips
+# ---------------------------------------------------------------------------
+
+
+def _tree_strategy():
+    leaf = st.tuples(
+        st.sampled_from([np.float32, np.int32, np.float64, np.uint8]),
+        st.lists(st.integers(1, 5), min_size=0, max_size=3),
+    )
+    return st.dictionaries(
+        st.text(st.characters(codec="ascii", categories=("Lu", "Ll")),
+                min_size=1, max_size=6),
+        st.one_of(
+            leaf,
+            st.dictionaries(
+                st.text(st.characters(codec="ascii", categories=("Ll",)),
+                        min_size=1, max_size=4),
+                leaf, min_size=1, max_size=3,
+            ),
+        ),
+        min_size=1,
+        max_size=4,
+    )
+
+
+def _materialize(spec, rng):
+    if isinstance(spec, dict):
+        return {k: _materialize(v, rng) for k, v in spec.items()}
+    dtype, shape = spec
+    if np.issubdtype(dtype, np.floating):
+        return rng.standard_normal(shape).astype(dtype)
+    return rng.integers(0, 100, size=shape).astype(dtype)
+
+
+@settings(max_examples=25, deadline=None)
+@given(_tree_strategy(), st.integers(0, 2 ** 31 - 1))
+def test_serialize_round_trip(spec, seed):
+    rng = np.random.default_rng(seed)
+    tree = _materialize(spec, rng)
+    out = deserialize_tree(serialize_tree(tree), tree)
+    import jax
+
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@settings(max_examples=20, deadline=None)
+@given(_tree_strategy(), st.integers(1, 7), st.integers(0, 2 ** 31 - 1))
+def test_shard_split_join_round_trip(spec, n_shards, seed):
+    rng = np.random.default_rng(seed)
+    tree = _materialize(spec, rng)
+    blobs = split_into_shards(tree, n_shards)
+    assert len(blobs) == n_shards
+    out = join_shards(list(reversed(blobs)), tree)  # order-independent
+    import jax
+
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# Straggler rebalancing
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    st.dictionaries(
+        st.sampled_from([f"h{i}" for i in range(8)]),
+        st.floats(0.01, 10.0, allow_nan=False),
+        min_size=2, max_size=8,
+    ),
+    st.integers(8, 64),
+)
+def test_rebalance_exact_and_no_worse_than_uniform(times, total):
+    alloc = rebalance_microbatches(times, total)
+    assert sum(alloc.values()) == total
+    assert all(a >= 1 for a in alloc.values())
+    # rebalanced sync step never slower than uniform assignment
+    n = len(times)
+    base = total // n
+    uniform = {h: base for h in times}
+    for h in list(times)[: total - base * n]:
+        uniform[h] += 1
+    assert (
+        step_time_sync(times, alloc)
+        <= step_time_sync(times, uniform) + 1e-9
+    )

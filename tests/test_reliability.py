@@ -1,0 +1,91 @@
+"""Unit tests for the paper's host_reliability formula (§III-B)."""
+
+import pytest
+
+from repro.core.reliability import (
+    HostRecord,
+    ReliabilityRegistry,
+    host_reliability,
+)
+
+
+class TestFormula:
+    def test_fresh_host_is_fully_reliable(self):
+        # NF == 0 -> 100, even with no assignments yet
+        assert host_reliability(0, 0, 0) == 100.0
+
+    def test_no_failures_always_100(self):
+        assert host_reliability(10, 10, 0) == 100.0
+        assert host_reliability(10, 3, 0) == 100.0  # still running some
+
+    def test_all_assignments_failed(self):
+        # NF == CA -> 0
+        assert host_reliability(5, 0, 5) == 0.0
+        assert host_reliability(1, 0, 1) == 0.0
+
+    def test_partial(self):
+        # otherwise (CC/CA)*100
+        assert host_reliability(10, 9, 1) == 90.0
+        assert host_reliability(4, 2, 1) == 50.0
+        assert host_reliability(3, 1, 2) == pytest.approx(100 / 3)
+
+    def test_idle_failures(self):
+        # failures before any assignment (outside the paper's formula):
+        # treated like the NF==CA case
+        assert host_reliability(0, 0, 3) == 0.0
+
+    def test_nf_exceeding_ca_capped(self):
+        # NF can exceed CA (host failures are not per-assignment);
+        # reliability stays CC/CA
+        assert host_reliability(4, 3, 5) == 75.0
+
+
+class TestRecord:
+    def test_nf_sums_host_and_guest_failures(self):
+        r = HostRecord("h", jobs_assigned=4, jobs_completed=2,
+                       host_failures=1, guest_failures=1)
+        assert r.nf == 2
+        assert r.reliability() == 50.0
+        assert r.failure_probability() == pytest.approx(0.5)
+
+    def test_storage(self):
+        r = HostRecord("h", storage_used=10, storage_limit=10)
+        assert r.storage_full()
+        r.storage_limit = 11
+        assert not r.storage_full()
+
+
+class TestRegistry:
+    def test_lifecycle(self):
+        reg = ReliabilityRegistry()
+        reg.add_host("a")
+        reg.record_assignment("a")
+        reg.record_completion("a")
+        assert reg.reliability("a") == 100.0
+        reg.record_assignment("a")
+        reg.record_host_failure("a")
+        assert reg.reliability("a") == 50.0
+
+    def test_ranked_descending_with_stable_ties(self):
+        reg = ReliabilityRegistry()
+        for h, (ca, cc, hf) in {
+            "a": (4, 2, 2), "b": (4, 3, 1), "c": (0, 0, 0), "d": (4, 3, 1),
+        }.items():
+            reg.add_host(h)
+            for _ in range(ca):
+                reg.record_assignment(h)
+            for _ in range(cc):
+                reg.record_completion(h)
+            for _ in range(hf):
+                reg.record_host_failure(h)
+        assert reg.ranked() == ["c", "b", "d", "a"]
+        assert reg.ranked(["a", "b"]) == ["b", "a"]
+
+    def test_state_round_trip(self):
+        reg = ReliabilityRegistry()
+        reg.add_host("a")
+        reg.record_assignment("a")
+        reg.record_guest_failure("a")
+        reg2 = ReliabilityRegistry.from_state(reg.to_state())
+        assert reg2.reliability("a") == reg.reliability("a")
+        assert reg2.get("a").guest_failures == 1

@@ -1,0 +1,123 @@
+"""Roofline machinery: HLO collective parsing + term derivation."""
+
+import pytest
+
+from repro.config import SHAPES
+from repro.configs import ARCHS
+from repro.launch.roofline import (
+    RooflineTerms,
+    analyze_collectives,
+    model_flops_for,
+    parse_collective_bytes,
+)
+
+FLAT_HLO = """
+HloModule jit_step, entry_computation_layout={...}
+
+ENTRY %main.1 (p0: f32[16,128]) -> f32[16,128] {
+  %p0 = f32[16,128]{1,0} parameter(0)
+  %ar = f32[16,128]{1,0} all-reduce(%p0), replica_groups={}, to_apply=%add
+  %ag = f32[256,128]{1,0} all-gather(%ar), dimensions={0}
+  %cp = f32[16,128]{1,0} collective-permute(%ar), source_target_pairs={{0,1}}
+  ROOT %out = f32[16,128]{1,0} add(%cp, %ar)
+}
+"""
+
+
+def test_flat_parse_counts_each_collective():
+    got = parse_collective_bytes(FLAT_HLO)
+    assert got["all-reduce"] == 16 * 128 * 4
+    assert got["all-gather"] == 256 * 128 * 4
+    assert got["collective-permute"] == 16 * 128 * 4
+    assert got["all-to-all"] == 0
+
+
+NESTED_HLO = """
+HloModule jit_step
+
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %r = f32[] add(%a, %b)
+}
+
+%body (t: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %t = (s32[], f32[8,8]) parameter(0)
+  %i = s32[] get-tuple-element(%t), index=0
+  %x = f32[8,8]{1,0} get-tuple-element(%t), index=1
+  %ar = f32[8,8]{1,0} all-reduce(%x), to_apply=%add
+  %one = s32[] constant(1)
+  %i2 = s32[] add(%i, %one)
+  ROOT %out = (s32[], f32[8,8]) tuple(%i2, %ar)
+}
+
+%cond (t: (s32[], f32[8,8])) -> pred[] {
+  %t = (s32[], f32[8,8]) parameter(0)
+  %i = s32[] get-tuple-element(%t), index=0
+  %n = s32[] constant(32)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+ENTRY %main (p: f32[8,8]) -> f32[8,8] {
+  %p = f32[8,8]{1,0} parameter(0)
+  %zero = s32[] constant(0)
+  %init = (s32[], f32[8,8]) tuple(%zero, %p)
+  %w = (s32[], f32[8,8]) while(%init), condition=%cond, body=%body
+  %ag = f32[64,8]{1,0} all-gather(%p), dimensions={0}
+  ROOT %res = f32[8,8]{1,0} get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_nested_while_multiplies_by_trip_count():
+    got = analyze_collectives(NESTED_HLO)
+    assert got["all-reduce"] == 32 * 8 * 8 * 4       # in-loop: ×32
+    assert got["all-gather"] == 64 * 8 * 4           # outside: ×1
+
+    flat = parse_collective_bytes(NESTED_HLO)
+    assert flat["all-reduce"] == 8 * 8 * 4           # undercounts (1×)
+
+
+class TestModelFlops:
+    def test_train_6nd(self):
+        cfg = ARCHS["qwen3-8b"]
+        shape = SHAPES["train_4k"]
+        n = cfg.param_counts()["active"]
+        assert model_flops_for(cfg, shape) == pytest.approx(
+            6 * n * 4096 * 256
+        )
+
+    def test_decode_counts_one_token_per_seq(self):
+        cfg = ARCHS["qwen3-8b"]
+        shape = SHAPES["decode_32k"]
+        n = cfg.param_counts()["active"]
+        assert model_flops_for(cfg, shape) == pytest.approx(2 * n * 128)
+
+    def test_moe_uses_active_params(self):
+        cfg = ARCHS["deepseek-moe-16b"]
+        shape = SHAPES["train_4k"]
+        f = model_flops_for(cfg, shape)
+        n_total = cfg.param_counts()["total"]
+        assert f < 6 * n_total * 4096 * 256 * 0.5
+
+
+class TestTerms:
+    def make(self, flops=1e15, byts=1e12, coll=1e10):
+        return RooflineTerms(
+            arch="a", shape="s", mesh="single", chips=256,
+            flops_per_chip=flops, bytes_per_chip=byts,
+            collective_bytes_per_chip=coll, collective_breakdown={},
+            model_flops=flops * 256 * 0.5,
+        )
+
+    def test_bound_selection(self):
+        assert self.make(flops=1e15, byts=1e9, coll=1e6).bound == "compute"
+        assert self.make(flops=1e12, byts=1e13, coll=1e6).bound == "memory"
+        assert self.make(flops=1e12, byts=1e9, coll=1e13).bound == "collective"
+
+    def test_ratios(self):
+        t = self.make()
+        assert t.useful_flops_ratio == pytest.approx(0.5)
+        assert 0 < t.roofline_fraction <= 1.0
+        d = t.to_dict()
+        assert d["bound"] == t.bound

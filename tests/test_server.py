@@ -1,0 +1,143 @@
+"""Ad hoc server behaviour: scheduling, transfer of control, failure
+handling and the restore protocol (paper §III)."""
+
+from repro.core.server import AdHocServer, JobState
+
+
+def make_server(hosts=("a", "b", "c"), **kw):
+    srv = AdHocServer(**kw)
+    srv.create_cloudlet("cl", "svc")
+    for h in hosts:
+        srv.register_host(h, 0.0, cloudlets=["cl"])
+    return srv
+
+
+def drain_commands(srv, host, now):
+    return srv.poll(host, now).commands
+
+
+class TestScheduling:
+    def test_job_goes_to_most_reliable_ready_host(self):
+        srv = make_server()
+        # degrade "a": one assignment, one failure
+        srv.reliability.record_assignment("a")
+        srv.reliability.record_host_failure("a")
+        srv.submit_job("cl", 100.0, now=1.0)
+        job = next(iter(srv.jobs.values()))
+        assert job.state == JobState.RUNNING
+        assert job.assigned_host == "b"      # a is 0%, b/c tie -> b
+        cmds = drain_commands(srv, "b", 2.0)
+        assert [c.kind for c in cmds] == ["start_guest"]
+
+    def test_busy_hosts_not_double_assigned(self):
+        srv = make_server(hosts=("a",))
+        srv.submit_job("cl", 10.0, now=0.0)
+        srv.submit_job("cl", 10.0, now=0.0)
+        states = sorted(j.state.value for j in srv.jobs.values())
+        assert states == ["queued", "running"]
+
+    def test_queued_job_scheduled_when_host_frees(self):
+        srv = make_server(hosts=("a",))
+        j1 = srv.submit_job("cl", 10.0, now=0.0)
+        j2 = srv.submit_job("cl", 10.0, now=0.0)
+        srv.report_completion("a", j1, now=5.0)
+        assert srv.jobs[j2].state == JobState.RUNNING
+
+
+class TestFailureAndRestore:
+    def test_host_timeout_requeues_and_restores_from_snapshot(self):
+        srv = make_server()
+        job_id = srv.submit_job("cl", 100.0, now=0.0)
+        runner = srv.jobs[job_id].assigned_host
+        # a snapshot of the job lands on the two other hosts
+        receivers = [h for h in ("a", "b", "c") if h != runner]
+        srv.report_snapshot(runner, job_id, receivers, 0.01, 100, now=30.0)
+        # runner goes silent; others keep polling
+        for t in (60.0, 120.0, 180.0):
+            for h in receivers:
+                srv.poll(h, t)
+        failed = srv.tick(181.0)
+        assert failed == [runner]
+        job = srv.jobs[job_id]
+        assert job.state == JobState.RUNNING
+        assert job.assigned_host in receivers
+        assert job.restores == 1
+        # the new runner received a restore command pointing at a replica
+        cmds = drain_commands(srv, job.assigned_host, 182.0)
+        kinds = [c.kind for c in cmds]
+        assert "restore" in kinds
+        restore = next(c for c in cmds if c.kind == "restore")
+        assert restore.args["source"] in receivers
+        # reliability of the failed host dropped
+        assert srv.reliability.reliability(runner) == 0.0
+
+    def test_no_snapshot_means_restart_from_zero(self):
+        srv = make_server()
+        job_id = srv.submit_job("cl", 100.0, now=0.0)
+        runner = srv.jobs[job_id].assigned_host
+        others = [h for h in ("a", "b", "c") if h != runner]
+        for t in (60.0, 120.0, 180.0):
+            for h in others:
+                srv.poll(h, t)
+        srv.tick(181.0)
+        job = srv.jobs[job_id]
+        assert job.restores == 0
+        assert job.restarts_from_zero == 1
+        new_cmds = drain_commands(srv, job.assigned_host, 182.0)
+        assert [c.kind for c in new_cmds] == ["start_guest"]
+
+    def test_guest_failure_reported_by_probe(self):
+        srv = make_server()
+        job_id = srv.submit_job("cl", 100.0, now=0.0)
+        runner = srv.jobs[job_id].assigned_host
+        srv.poll(runner, 10.0, guest_ok=False)
+        assert srv.reliability.get(runner).guest_failures == 1
+        # job got rescheduled (possibly onto the same, now-free host)
+        assert srv.jobs[job_id].state == JobState.RUNNING
+        assert srv.jobs[job_id].attempts == 2
+
+    def test_fast_reboot_detected_on_return(self):
+        srv = make_server()
+        job_id = srv.submit_job("cl", 100.0, now=0.0)
+        runner = srv.jobs[job_id].assigned_host
+        # host reboots within the 2-min window: no timeout fires
+        srv.host_returned(runner, 60.0)
+        assert srv.reliability.get(runner).guest_failures == 1
+        assert srv.jobs[job_id].attempts == 2
+
+    def test_completion_deletes_replicas(self):
+        srv = make_server()
+        job_id = srv.submit_job("cl", 10.0, now=0.0)
+        runner = srv.jobs[job_id].assigned_host
+        others = [h for h in ("a", "b", "c") if h != runner]
+        srv.report_snapshot(runner, job_id, others, 0.01, 64, now=5.0)
+        srv.report_completion(runner, job_id, now=9.0)
+        for h in others:
+            cmds = drain_commands(srv, h, 10.0)
+            assert any(c.kind == "delete_snapshot" for c in cmds)
+        assert srv.snapshots.locations(job_id) == []
+
+    def test_max_attempts_fails_permanently(self):
+        srv = make_server(hosts=("a",), max_job_attempts=2)
+        job_id = srv.submit_job("cl", 10.0, now=0.0)
+        srv.poll("a", 1.0, guest_ok=False)     # attempt 1 dies, attempt 2 starts
+        srv.poll("a", 2.0, guest_ok=False)     # attempt 2 dies: limit reached
+        assert srv.jobs[job_id].state == JobState.FAILED
+
+
+class TestServerReplication:
+    def test_state_round_trip_preserves_scheduling(self):
+        srv = make_server()
+        job_id = srv.submit_job("cl", 50.0, now=0.0)
+        runner = srv.jobs[job_id].assigned_host
+        srv.report_snapshot(runner, job_id,
+                            [h for h in ("a", "b", "c") if h != runner],
+                            0.02, 128, now=10.0)
+        clone = AdHocServer.from_state(srv.to_state())
+        assert clone.jobs[job_id].state == JobState.RUNNING
+        assert clone.jobs[job_id].assigned_host == runner
+        assert clone.snapshots.locations(job_id) == \
+            srv.snapshots.locations(job_id)
+        # the standby can keep operating: completion works
+        clone.report_completion(runner, job_id, now=20.0)
+        assert clone.jobs[job_id].state == JobState.COMPLETED

@@ -1,0 +1,85 @@
+"""Discrete-event simulation substrate + failure traces."""
+
+import pytest
+
+from repro.core.events import (
+    FailureTrace,
+    constant_failure_trace,
+    nagios_like_trace,
+    replay,
+)
+from repro.core.simulation import EventLoop, SimClock
+
+
+class TestEventLoop:
+    def test_ordered_execution(self):
+        loop = EventLoop(SimClock())
+        seen = []
+        loop.schedule(5.0, lambda: seen.append("b"))
+        loop.schedule(1.0, lambda: seen.append("a"))
+        loop.schedule(5.0, lambda: seen.append("c"))  # ties: insertion order
+        loop.run_until(10.0)
+        assert seen == ["a", "b", "c"]
+        assert loop.clock.now() == 10.0
+
+    def test_periodic(self):
+        loop = EventLoop(SimClock())
+        ticks = []
+        loop.every(10.0, lambda: ticks.append(loop.clock.now()))
+        loop.run_until(35.0)
+        assert ticks == [10.0, 20.0, 30.0]
+
+    def test_cancel(self):
+        loop = EventLoop(SimClock())
+        ticks = []
+        ev = loop.every(1.0, lambda: ticks.append(1))
+        loop.run_until(2.5)
+        loop.cancel(ev)
+        loop.run_until(10.0)
+        assert len(ticks) == 2
+
+    def test_events_scheduled_during_run(self):
+        loop = EventLoop(SimClock())
+        seen = []
+        loop.schedule(1.0, lambda: loop.schedule(1.0, lambda: seen.append("x")))
+        loop.run_until(3.0)
+        assert seen == ["x"]
+
+
+class TestTraces:
+    def test_deterministic(self):
+        t1 = nagios_like_trace(10, 3600.0, seed=7)
+        t2 = nagios_like_trace(10, 3600.0, seed=7)
+        assert t1.events == t2.events
+        t3 = nagios_like_trace(10, 3600.0, seed=8)
+        assert t1.events != t3.events
+
+    def test_alternating_and_in_range(self):
+        tr = nagios_like_trace(20, 3600.0, seed=0)
+        for h in tr.host_ids:
+            evs = tr.for_host(h)
+            assert all(0 <= e.t < 3600.0 for e in evs)
+            for a, b in zip(evs, evs[1:]):
+                assert a.kind != b.kind      # strict down/up alternation
+            if evs:
+                assert evs[0].kind == "down"  # hosts start UP
+
+    def test_downtime_fraction(self):
+        tr = constant_failure_trace(["h"], {"h": [100.0]}, 1000.0,
+                                    recovery=100.0)
+        assert tr.downtime_fraction("h") == pytest.approx(0.1)
+        assert tr.n_failures("h") == 1
+
+    def test_json_round_trip(self):
+        tr = nagios_like_trace(5, 600.0, seed=3)
+        tr2 = FailureTrace.from_json(tr.to_json())
+        assert tr2.events == tr.events
+        assert tr2.host_ids == tr.host_ids
+
+    def test_replay_order_and_horizon(self):
+        tr = nagios_like_trace(10, 3600.0, seed=1)
+        seen = []
+        for _ in replay(tr, seen.append, until=1800.0):
+            pass
+        assert seen == [e for e in tr.events if e.t < 1800.0]
+        assert all(a.t <= b.t for a, b in zip(seen, seen[1:]))

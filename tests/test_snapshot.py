@@ -1,0 +1,100 @@
+"""Unit tests for P2P snapshot placement (§III-D)."""
+
+import pytest
+
+from repro.core.snapshot import (
+    SnapshotScheduler,
+    joint_failure_probability,
+    select_receivers,
+)
+
+
+class TestJointProbability:
+    def test_product(self):
+        assert joint_failure_probability([0.5, 0.5]) == 0.25
+        assert joint_failure_probability([0.1, 0.2, 0.3]) == pytest.approx(0.006)
+
+    def test_empty_is_certain_failure(self):
+        # no receivers -> "all receivers fail" vacuously true
+        assert joint_failure_probability([]) == 1.0
+
+    def test_paper_example_magnitude(self):
+        # Figure 5 narrative: three receivers drive job-loss prob to 0.03%
+        assert joint_failure_probability([0.1, 0.1, 0.03]) <= 0.0005
+
+
+class TestSelectReceivers:
+    def test_takes_minimal_prefix(self):
+        fp = {"a": 0.1, "b": 0.2, "c": 0.3}
+        recv, joint = select_receivers(["a", "b", "c"], fp, target=0.05)
+        # a alone: 0.1 > 0.05; a+b: 0.02 <= 0.05 -> stop at 2
+        assert recv == ["a", "b"]
+        assert joint == pytest.approx(0.02)
+
+    def test_single_reliable_host_suffices(self):
+        recv, joint = select_receivers(["a"], {"a": 0.0}, target=0.05)
+        assert recv == ["a"] and joint == 0.0
+
+    def test_best_effort_when_unreachable(self):
+        fp = {h: 0.9 for h in "abcd"}
+        recv, joint = select_receivers(list("abcd"), fp, target=0.05,
+                                       max_receivers=3)
+        assert recv == ["a", "b", "c"]       # capped
+        assert joint == pytest.approx(0.9 ** 3)
+        assert joint > 0.05                  # caller sees the miss
+
+
+class TestSchedulerPlacement:
+    def make(self, **kw):
+        return SnapshotScheduler(**kw)
+
+    def test_filters(self):
+        s = self.make()
+        cands = s.filter_candidates(
+            "me",
+            ["me", "busy", "down", "full", "ok1", "ok2"],
+            in_use={"busy"},
+            available={"me", "busy", "full", "ok1", "ok2"},
+            storage_full={"full"},
+        )
+        assert cands == ["ok1", "ok2"]
+
+    def test_place_sorts_by_reliability(self):
+        s = self.make()
+        fp = {"flaky": 0.5, "good": 0.01, "ok": 0.2}
+        recv, joint = s.place(
+            "me", ["flaky", "good", "ok"], fp,
+            in_use=set(), available={"flaky", "good", "ok"},
+            storage_full=set(),
+        )
+        assert recv == ["good"]          # most reliable first; bound met
+        assert joint == pytest.approx(0.01)
+
+    def test_keep_only_latest_and_restore_bookkeeping(self):
+        s = self.make()
+        s.record_placement("g1", ["a", "b"], 0.01, size_bytes=10, now=0.0)
+        meta = s.record_placement("g1", ["b", "c"], 0.02, size_bytes=10, now=5.0)
+        assert meta.version == 2
+        assert s.locations("g1") == ["b", "c"]    # only the latest
+        # failed host drops out of locations
+        s.drop_host("b")
+        assert s.locations("g1") == ["c"]
+        # restore picks the most reliable available holder
+        src = s.restore_source("g1", available={"c"}, reliability_rank=["c"])
+        assert src == "c"
+        # after restore all replicas are deleted
+        assert set(s.forget("g1")) == {"c"}
+        assert s.locations("g1") == []
+
+    def test_restore_source_none_when_all_lost(self):
+        s = self.make()
+        s.record_placement("g", ["a"], 0.01, size_bytes=1, now=0.0)
+        s.drop_host("a")
+        assert s.restore_source("g", available=set(), reliability_rank=[]) is None
+
+    def test_state_round_trip(self):
+        s = self.make()
+        s.record_placement("g", ["a", "b"], 0.04, size_bytes=7, now=1.0)
+        s2 = SnapshotScheduler.from_state(s.to_state())
+        assert s2.locations("g") == ["a", "b"]
+        assert s2.latest["g"].joint_failure == 0.04
