@@ -10,6 +10,7 @@ Sections:
 - straggler    — interference mitigation (low-interference rule)
 - kernel       — kernel micro-benchmarks
 - roofline     — per-cell roofline terms from dry-run artifacts
+- serving      — paged vs dense serving engine (BENCH_SERVING)
 """
 
 import argparse
@@ -18,7 +19,7 @@ import sys
 
 
 SECTIONS = ["reliability", "performance", "snapshot", "straggler",
-            "kernel", "roofline"]
+            "kernel", "roofline", "serving"]
 
 
 def main() -> None:
@@ -46,6 +47,8 @@ def main() -> None:
                 from benchmarks import kernel_bench as m
             elif name == "roofline":
                 from benchmarks import roofline_bench as m
+            elif name == "serving":
+                from benchmarks import serving_bench as m
             m.main(rows)
         except Exception as e:  # keep the harness running
             print(f"SECTION FAILED: {name}: {type(e).__name__}: {e}")

@@ -208,6 +208,40 @@ def _decode_attention_xla(q, k, v, lengths):
 
 
 # ---------------------------------------------------------------------------
+# Paged decode attention (single token vs paged KV cache)
+# ---------------------------------------------------------------------------
+
+
+def paged_decode_attention(
+    q: jax.Array,           # (B, H, D)
+    k_pages: jax.Array,     # (n_pages, P, K, D) — shared page pool
+    v_pages: jax.Array,     # (n_pages, P, K, D)
+    page_table: jax.Array,  # (B, max_pages) int32
+    lengths: jax.Array,     # (B,) int32
+) -> jax.Array:
+    b = current_backend()
+    if b == "xla":
+        return _paged_decode_attention_xla(q, k_pages, v_pages, page_table,
+                                           lengths)
+    mod = _pallas("paged_decode_attention")
+    return mod.paged_decode_attention(
+        q, k_pages, v_pages, page_table, lengths,
+        interpret=(b == "pallas_interpret"),
+    )
+
+
+def _paged_decode_attention_xla(q, k_pages, v_pages, page_table, lengths):
+    """Pure-XLA paged decode: gather each sequence's pages through the same
+    page table the Pallas kernel prefetches, then run the masked-softmax
+    decode path. The gather is a transient — the resident cache stays paged."""
+    B, H, D = q.shape
+    K = k_pages.shape[2]
+    k = k_pages[page_table].reshape(B, -1, K, D)
+    v = v_pages[page_table].reshape(B, -1, K, D)
+    return _decode_attention_xla(q, k, v, lengths)
+
+
+# ---------------------------------------------------------------------------
 # Causal depthwise conv (Mamba front conv)
 # ---------------------------------------------------------------------------
 

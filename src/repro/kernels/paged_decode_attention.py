@@ -1,0 +1,140 @@
+"""Paged flash-decode Pallas kernel: one query token vs a paged KV cache.
+
+Same bandwidth-bound problem as ``decode_attention`` but the cache lives in
+a shared page pool: ``k_pages/v_pages (n_pages, page, K, D)`` hold fixed-size
+pages owned by many sequences, and ``page_table (B, max_pages)`` maps each
+sequence's logical page index to a physical page id. Tiling: grid
+``(batch, pages)`` with the page table delivered through *scalar prefetch*
+(:class:`pltpu.PrefetchScalarGridSpec`) so the k/v BlockSpec index maps can
+dereference ``table[b, pi]`` when scheduling the page DMA — the kernel
+streams exactly the pages a sequence owns, never a dense ``(B, S)`` cache.
+
+Online-softmax statistics carry in VMEM scratch across the page dimension
+(sequential on TPU); pages entirely past ``lengths[b]`` are skipped with
+``pl.when``, so a sequence at length 100 with 64-token pages does two pages
+of work regardless of pool size. GQA is computed by reshaping H into (K, G)
+groups inside the kernel — no head expansion in HBM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_decode_kernel(
+    len_ref,   # scalar prefetch (B,) int32
+    tab_ref,   # scalar prefetch (B, max_pages) int32
+    q_ref,     # (1, H, D)
+    k_ref,     # (1, P, K, D) — the physical page table[b, pi]
+    v_ref,     # (1, P, K, D)
+    o_ref,     # (1, H, D)
+    m_ref,     # scratch (H,)
+    l_ref,     # scratch (H,)
+    acc_ref,   # scratch (H, D)
+    *,
+    page_size: int,
+    scale: float,
+):
+    b = pl.program_id(0)
+    pi = pl.program_id(1)
+    npg = pl.num_programs(1)
+    length = len_ref[b]
+
+    @pl.when(pi == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(pi * page_size < length)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale          # (H, D)
+        k = k_ref[0].astype(jnp.float32)                  # (P, K, D)
+        v = v_ref[0].astype(jnp.float32)
+        H, D = q.shape
+        P, K, _ = k.shape
+        G = H // K
+        qg = q.reshape(K, G, D)
+        # s[k, g, p] = qg[k,g,:] · k[p,k,:]
+        s = jax.lax.dot_general(
+            qg, k, (((2,), (2,)), ((0,), (1,)))
+        )                                                  # (K, G, P)
+        kpos = pi * page_size + jax.lax.iota(jnp.int32, P)
+        valid = kpos < length
+        s = jnp.where(valid[None, None, :], s, NEG_INF)
+        s = s.reshape(H, P)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])                    # (H, P)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1)
+        pg = p.reshape(K, G, P)
+        # o[k, g, d] = Σ_p pg[k,g,p] v[p,k,d]
+        og = jax.lax.dot_general(
+            pg, v, (((2,), (0,)), ((0,), (1,)))
+        )                                                  # (K, G, D)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + og.reshape(H, D)
+        m_ref[...] = m_new
+
+    @pl.when(pi == npg - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_attention(
+    q: jax.Array,           # (B, H, D)
+    k_pages: jax.Array,     # (n_pages, P, K, D)
+    v_pages: jax.Array,     # (n_pages, P, K, D)
+    page_table: jax.Array,  # (B, max_pages) int32 — physical page ids
+    lengths: jax.Array,     # (B,) int32 — valid tokens per sequence
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    B, H, D = q.shape
+    n_pages, P, K, _ = k_pages.shape
+    assert H % K == 0, (H, K)
+    max_pages = page_table.shape[1]
+    scale = D ** -0.5
+
+    kernel = functools.partial(_paged_decode_kernel, page_size=P, scale=scale)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, max_pages),
+        in_specs=[
+            pl.BlockSpec((1, H, D), lambda b, pi, lens, tab: (b, 0, 0)),
+            pl.BlockSpec(
+                (1, P, K, D), lambda b, pi, lens, tab: (tab[b, pi], 0, 0, 0)
+            ),
+            pl.BlockSpec(
+                (1, P, K, D), lambda b, pi, lens, tab: (tab[b, pi], 0, 0, 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec((1, H, D), lambda b, pi, lens, tab: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((H,), jnp.float32),
+            pltpu.VMEM((H,), jnp.float32),
+            pltpu.VMEM((H, D), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, D), q.dtype),
+        interpret=interpret,
+    )(
+        lengths.astype(jnp.int32),
+        page_table.astype(jnp.int32),
+        q,
+        k_pages,
+        v_pages,
+    )

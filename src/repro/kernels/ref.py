@@ -107,6 +107,31 @@ def decode_attention(
 
 
 # ---------------------------------------------------------------------------
+# Paged decode attention (one query token vs a paged KV cache)
+# ---------------------------------------------------------------------------
+
+
+def paged_decode_attention(
+    q: jax.Array,           # (B, H, D) — single new token per sequence
+    k_pages: jax.Array,     # (n_pages, P, K, D) — shared page pool
+    v_pages: jax.Array,     # (n_pages, P, K, D)
+    page_table: jax.Array,  # (B, max_pages) int32 — physical page ids
+    lengths: jax.Array,     # (B,) int32 — valid tokens per sequence
+    *,
+    scale: float | None = None,
+) -> jax.Array:
+    """Paged flash-decode oracle: gather each sequence's pages through its
+    page table into a dense per-sequence cache, then run the dense decode
+    oracle. Entries past ``lengths[b]`` (including whatever the table points
+    at for unused logical pages) are masked out."""
+    b, h, d = q.shape
+    n_pages, p, k_heads, _ = k_pages.shape
+    k = k_pages[page_table].reshape(b, -1, k_heads, d)  # (B, max_pages*P, K, D)
+    v = v_pages[page_table].reshape(b, -1, k_heads, d)
+    return decode_attention(q, k, v, lengths, scale=scale)
+
+
+# ---------------------------------------------------------------------------
 # Mamba1 selective scan
 # ---------------------------------------------------------------------------
 

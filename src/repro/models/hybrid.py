@@ -72,7 +72,11 @@ def _split_xbc(xbc, cfg):
 
 
 def _block(lp, x, cfg: ModelConfig, *, conv_state=None, ssm_state=None,
-           return_state=False):
+           return_state=False, valid=None):
+    """Mamba2 block. ``valid`` (scalar, traced) marks how many leading
+    tokens are real: pads get ``dt = 0`` so the SSD recurrence is an
+    identity for them — chunked prefill can pad the final chunk without
+    corrupting the carried state."""
     B, S, d = x.shape
     nh, P = cfg.n_ssm_heads, cfg.ssm_head_dim
     h = ops.rmsnorm(x, lp["ln"], cfg.norm_eps)
@@ -88,6 +92,8 @@ def _block(lp, x, cfg: ModelConfig, *, conv_state=None, ssm_state=None,
         jnp.einsum("bsd,dh->bsh", h, ll.cast(lp["wdt"])).astype(jnp.float32)
         + lp["dt_bias"].astype(jnp.float32)
     )
+    if valid is not None:
+        dt = jnp.where(jnp.arange(S)[None, :, None] < valid, dt, 0.0)
     A = -jnp.exp(lp["A_log"].astype(jnp.float32))
     xh = xin.reshape(B, S, nh, P)
     y, hT = ops.ssd(
@@ -102,9 +108,15 @@ def _block(lp, x, cfg: ModelConfig, *, conv_state=None, ssm_state=None,
     if not return_state:
         return out, None
     W = cfg.d_conv
-    new_conv = pre_conv[:, S - (W - 1):, :] if S >= W - 1 else jnp.pad(
-        pre_conv, ((0, 0), (W - 1 - S, 0), (0, 0))
-    )
+    if valid is not None:
+        prev = conv_state.astype(pre_conv.dtype) if conv_state is not None \
+            else jnp.zeros((B, W - 1, pre_conv.shape[-1]), pre_conv.dtype)
+        ext = jnp.concatenate([prev, pre_conv], axis=1)
+        new_conv = jax.lax.dynamic_slice_in_dim(ext, valid, W - 1, axis=1)
+    else:
+        new_conv = pre_conv[:, S - (W - 1):, :] if S >= W - 1 else jnp.pad(
+            pre_conv, ((0, 0), (W - 1 - S, 0), (0, 0))
+        )
     return out, (new_conv.astype(jnp.bfloat16), hT)
 
 
@@ -140,17 +152,29 @@ def _block_decode(lp, x, cfg: ModelConfig, conv_state, ssm_state):
 
 
 def _shared_block(params, app_idx, x, x0, cfg, positions, *, kv_cache=None,
-                  decode_positions=None):
+                  decode_positions=None, paged=None, chunk_offset=None):
     """Apply the weight-shared attention+MLP block (application `app_idx`).
 
     Returns (new_x, (k, v)) — full-seq mode — or (new_x, (ck, cv)) in decode
-    mode when `kv_cache`=(ck, cv) is given.
+    mode when `kv_cache`=(ck, cv) is given. With ``paged=(k_pages, v_pages,
+    page_table)`` the attention runs against the paged cache instead: a
+    batched decode step when ``decode_positions`` is given, or a prompt
+    chunk at static ``chunk_offset`` during chunked prefill.
     """
     sp = params["shared"]
     proj = ll.cast(params["app_proj"][app_idx])
     inp = jnp.einsum("bsd,df->bsf", jnp.concatenate([x, x0], -1), proj)
     h = ops.rmsnorm(inp, sp["attn"]["ln"], cfg.norm_eps)
-    if kv_cache is None:
+    if paged is not None:
+        kp, vp, table = paged
+        if chunk_offset is not None:
+            a, kp, vp = ll.attn_prefill_chunk(sp["attn"], h, cfg,
+                                              chunk_offset, kp, vp, table)
+        else:
+            a, kp, vp = ll.attn_decode_paged(sp["attn"], h, cfg,
+                                             decode_positions, kp, vp, table)
+        kv = (kp, vp)
+    elif kv_cache is None:
         a, kv = ll.attn_forward(sp["attn"], h, cfg, positions)
     else:
         a, ck, cv = ll.attn_decode(
@@ -268,6 +292,127 @@ def decode_fn(params, cache, batch, cfg: ModelConfig):
     return logits, new_cache
 
 
+# ---------------------------------------------------------------------------
+# Paged serving path: the shared-attention KV caches page like any other
+# attention cache; the Mamba2 conv/SSM states stay dense per slot (O(1) in
+# sequence length) and chunked prefill writes them in place.
+# ---------------------------------------------------------------------------
+
+
+def paged_cache_specs(cfg: ModelConfig, n_slots: int, n_pages: int,
+                      page_size: int) -> dict:
+    L, N, W = cfg.n_layers, cfg.ssm_state, cfg.d_conv
+    di = cfg.d_inner
+    nh, P = cfg.n_ssm_heads, cfg.ssm_head_dim
+    n_apps = len(cfg.hybrid_attention_layers())
+    K, dh = cfg.n_kv_heads, cfg.d_head
+    page_axes = ("layers", "pages", "page", "kv_heads", "head_dim")
+    return {
+        "conv": PSpec((L, n_slots, W - 1, di + 2 * N),
+                      ("layers", "batch", "conv", "inner"), init="zeros"),
+        "ssm": PSpec((L, n_slots, nh, P, N),
+                     ("layers", "batch", "ssm_heads", None, "state"),
+                     init="zeros"),
+        "att_k_pages": PSpec((n_apps, n_pages, page_size, K, dh),
+                             page_axes, init="zeros"),
+        "att_v_pages": PSpec((n_apps, n_pages, page_size, K, dh),
+                             page_axes, init="zeros"),
+    }
+
+
+def prefill_chunk_fn(params, cache, batch, cfg: ModelConfig, *, offset: int):
+    slot = batch["slot"]
+    valid = batch["valid"]
+    table = batch["page_table"]
+    x = ll.embed_lookup(params, batch["tokens"])          # (1, C, d)
+    x0 = x
+    conv_sl = jax.lax.dynamic_slice_in_dim(cache["conv"], slot, 1, axis=1)
+    ssm_sl = jax.lax.dynamic_slice_in_dim(cache["ssm"], slot, 1, axis=1)
+    if offset == 0:  # fresh admission: ignore whatever the slot last held
+        conv_sl = jnp.zeros_like(conv_sl)
+        ssm_sl = jnp.zeros_like(ssm_sl)
+    convs, ssms, att_k, att_v = [], [], [], []
+
+    def body(carry, xs):
+        lp, cs, ss = xs
+        out, st = _block(lp, carry, cfg, conv_state=cs, ssm_state=ss,
+                         return_state=True, valid=valid)
+        return out, st
+
+    for app_idx, (layer_i, a, b) in enumerate(_segments(cfg)):
+        x, (kp, vp) = _shared_block(
+            params, app_idx, x, x0, cfg, None,
+            paged=(cache["att_k_pages"][app_idx],
+                   cache["att_v_pages"][app_idx], table),
+            chunk_offset=offset,
+        )
+        att_k.append(kp)
+        att_v.append(vp)
+        x, (cs, ss) = jax.lax.scan(
+            body, x,
+            (_slice_stack(params["layers"], a, b), conv_sl[a:b], ssm_sl[a:b]),
+            unroll=tracing.scan_unroll(),
+        )
+        convs.append(cs)
+        ssms.append(ss)
+    x = ops.rmsnorm(x, params["final_ln"], cfg.norm_eps)
+    last = jax.lax.dynamic_slice_in_dim(x, valid - 1, 1, axis=1)
+    logits = ll.logits_last(params, last[:, 0], cfg)
+    new_conv = jnp.concatenate(convs, 0)
+    new_ssm = jnp.concatenate(ssms, 0)
+    new_cache = {
+        "conv": jax.lax.dynamic_update_slice_in_dim(
+            cache["conv"], new_conv.astype(cache["conv"].dtype), slot, axis=1
+        ),
+        "ssm": jax.lax.dynamic_update_slice_in_dim(
+            cache["ssm"], new_ssm.astype(cache["ssm"].dtype), slot, axis=1
+        ),
+        "att_k_pages": jnp.stack(att_k, 0),
+        "att_v_pages": jnp.stack(att_v, 0),
+    }
+    return logits, new_cache
+
+
+def decode_paged_fn(params, cache, batch, cfg: ModelConfig):
+    positions = batch["positions"]
+    table = batch["page_table"]
+    x = ll.embed_lookup(params, batch["tokens"])
+    x0 = x
+    convs, ssms, att_k, att_v = [], [], [], []
+
+    def body(carry, xs):
+        lp, cs, ss = xs
+        out, cs, ss = _block_decode(lp, carry, cfg, cs, ss)
+        return out, (cs, ss)
+
+    for app_idx, (layer_i, a, b) in enumerate(_segments(cfg)):
+        x, (kp, vp) = _shared_block(
+            params, app_idx, x, x0, cfg, None,
+            paged=(cache["att_k_pages"][app_idx],
+                   cache["att_v_pages"][app_idx], table),
+            decode_positions=positions,
+        )
+        att_k.append(kp)
+        att_v.append(vp)
+        x, (cs, ss) = jax.lax.scan(
+            body, x,
+            (_slice_stack(params["layers"], a, b),
+             cache["conv"][a:b], cache["ssm"][a:b]),
+            unroll=tracing.scan_unroll(),
+        )
+        convs.append(cs)
+        ssms.append(ss)
+    x = ops.rmsnorm(x, params["final_ln"], cfg.norm_eps)
+    logits = ll.logits_last(params, x[:, 0], cfg)
+    new_cache = {
+        "conv": jnp.concatenate(convs, 0),
+        "ssm": jnp.concatenate(ssms, 0),
+        "att_k_pages": jnp.stack(att_k, 0),
+        "att_v_pages": jnp.stack(att_v, 0),
+    }
+    return logits, new_cache
+
+
 def cache_specs(cfg: ModelConfig, batch: int, max_seq: int) -> dict:
     L, N, W = cfg.n_layers, cfg.ssm_state, cfg.d_conv
     di = cfg.d_inner
@@ -298,4 +443,7 @@ def make_model(cfg: ModelConfig) -> ModelFns:
         prefill=functools.partial(prefill_fn, cfg=cfg),
         decode_step=functools.partial(decode_fn, cfg=cfg),
         input_specs=functools.partial(standard_input_specs, cfg),
+        paged_cache_specs=functools.partial(paged_cache_specs, cfg),
+        prefill_chunk=functools.partial(prefill_chunk_fn, cfg=cfg),
+        decode_paged=functools.partial(decode_paged_fn, cfg=cfg),
     )

@@ -140,6 +140,90 @@ def kv_append(cache: jax.Array, new: jax.Array, positions: jax.Array) -> jax.Arr
 
 
 # ---------------------------------------------------------------------------
+# Paged attention (shared page pool + per-slot page tables)
+# ---------------------------------------------------------------------------
+
+
+def paged_kv_append(
+    pages: jax.Array,       # (n_pages, P, K, dh) — shared pool
+    new: jax.Array,         # (B, 1, K, dh)
+    page_table: jax.Array,  # (B, max_pages) int32
+    positions: jax.Array,   # (B,) — token position being written
+) -> jax.Array:
+    """Scatter one token per sequence into its page-table-mapped page.
+
+    Pages are exclusively owned by one sequence, so the (page, offset)
+    targets never collide across the batch. Inactive lanes must point their
+    table rows at the reserved scratch page (id 0).
+    """
+    P = pages.shape[1]
+    pid = jnp.take_along_axis(
+        page_table, (positions // P)[:, None], axis=1
+    )[:, 0]
+    off = positions % P
+    return pages.at[pid, off].set(new[:, 0].astype(pages.dtype))
+
+
+def attn_decode_paged(
+    p: dict,
+    x: jax.Array,            # (B, 1, d)
+    cfg: ModelConfig,
+    positions: jax.Array,    # (B,)
+    k_pages: jax.Array,      # (n_pages, P, K, dh)
+    v_pages: jax.Array,
+    page_table: jax.Array,   # (B, max_pages)
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Single-token attention against a paged cache. Returns
+    (out, new_k_pages, new_v_pages)."""
+    q, k, v = _project_qkv(p, x, cfg, positions[:, None])
+    k_pages = paged_kv_append(k_pages, k, page_table, positions)
+    v_pages = paged_kv_append(v_pages, v, page_table, positions)
+    out = ops.paged_decode_attention(q[:, 0], k_pages, v_pages, page_table,
+                                     positions + 1)
+    out = jnp.einsum("bhk,hkd->bd", out, cast(p["wo"]))[:, None]
+    return out, k_pages, v_pages
+
+
+def attn_prefill_chunk(
+    p: dict,
+    x: jax.Array,            # (1, C, d) — one prompt chunk, already normalized
+    cfg: ModelConfig,
+    offset: int,             # static: absolute position of x[:, 0]
+    k_pages: jax.Array,      # (n_pages, P, K, dh)
+    v_pages: jax.Array,
+    page_table: jax.Array,   # (max_pages,) — the owning slot's table row
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Chunked-prefill attention: write the chunk's K/V straight into the
+    slot's pages, then attend causally over the gathered context pages
+    ``[0, offset + C)`` (earlier chunks + this one). ``offset`` is static, so
+    the context gather is exactly as long as needed — admission cost is
+    O(prompt pages), not O(max_seq). Returns (out, k_pages, v_pages)."""
+    C = x.shape[1]
+    P = k_pages.shape[1]
+    max_pages = page_table.shape[0]
+    positions = offset + jnp.arange(C)
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    logical = (offset + jnp.arange(C)) // P               # (C,)
+    # pad-tail positions past the table's capacity land on the scratch page
+    # (id 0) instead of clobbering a clamped-index real page
+    pid = jnp.where(
+        logical < max_pages,
+        page_table[jnp.minimum(logical, max_pages - 1)],
+        0,
+    )
+    off = (offset + jnp.arange(C)) % P
+    k_pages = k_pages.at[pid, off].set(k[0].astype(k_pages.dtype))
+    v_pages = v_pages.at[pid, off].set(v[0].astype(v_pages.dtype))
+    n_ctx = min((offset + C + P - 1) // P, max_pages)     # static page count
+    k_ctx = k_pages[page_table[:n_ctx]].reshape(1, n_ctx * P, *k.shape[2:])
+    v_ctx = v_pages[page_table[:n_ctx]].reshape(1, n_ctx * P, *v.shape[2:])
+    # keys past offset+C sit above the causal diagonal for every real query
+    out = ops.attention(q, k_ctx, v_ctx, causal=True, q_offset=offset)
+    out = jnp.einsum("bshk,hkd->bsd", out, cast(p["wo"]))
+    return out, k_pages, v_pages
+
+
+# ---------------------------------------------------------------------------
 # MLPs
 # ---------------------------------------------------------------------------
 

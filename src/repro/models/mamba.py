@@ -78,8 +78,14 @@ def _ssm_inputs(lp, xin, cfg):
 
 
 def _block(lp, x, cfg: ModelConfig, *, conv_state=None, ssm_state=None,
-           return_state=False):
-    """Full-seq mamba block. Returns (out, (conv_state, ssm_state))."""
+           return_state=False, valid=None):
+    """Full-seq mamba block. Returns (out, (conv_state, ssm_state)).
+
+    ``valid`` (scalar, traced) marks how many leading tokens are real: pad
+    tokens get ``dt = 0``, which makes the recurrence an identity
+    (``exp(0·A) = 1``, ``dt·x·B = 0``) — the carried SSM state is exactly
+    the state after ``valid`` tokens, so chunked prefill can pad the final
+    chunk without corrupting state."""
     B, S, d = x.shape
     h = ops.rmsnorm(x, lp["ln"], cfg.norm_eps)
     xin = jnp.einsum("bsd,de->bse", h, ll.cast(lp["wx"]))
@@ -90,6 +96,8 @@ def _block(lp, x, cfg: ModelConfig, *, conv_state=None, ssm_state=None,
     xin = jax.nn.silu(xin.astype(jnp.float32)).astype(xin.dtype)
 
     dt, Bm, C, A, D = _ssm_inputs(lp, xin, cfg)
+    if valid is not None:
+        dt = jnp.where(jnp.arange(S)[None, :, None] < valid, dt, 0.0)
     y, hT = ops.selective_scan(
         xin, dt.astype(xin.dtype), A, Bm, C, D,
         h0=ssm_state, chunk=cfg.ssm_chunk,
@@ -102,9 +110,16 @@ def _block(lp, x, cfg: ModelConfig, *, conv_state=None, ssm_state=None,
     if not return_state:
         return out, None
     W = cfg.d_conv
-    new_conv = pre_conv[:, S - (W - 1):, :] if S >= W - 1 else jnp.pad(
-        pre_conv, ((0, 0), (W - 1 - S, 0), (0, 0))
-    )
+    if valid is not None:
+        prev = conv_state.astype(pre_conv.dtype) if conv_state is not None \
+            else jnp.zeros((B, W - 1, pre_conv.shape[-1]), pre_conv.dtype)
+        ext = jnp.concatenate([prev, pre_conv], axis=1)   # (B, W-1+S, di)
+        # rows [valid, valid+W-1) = last W-1 real rows (prev ‖ chunk[:valid])
+        new_conv = jax.lax.dynamic_slice_in_dim(ext, valid, W - 1, axis=1)
+    else:
+        new_conv = pre_conv[:, S - (W - 1):, :] if S >= W - 1 else jnp.pad(
+            pre_conv, ((0, 0), (W - 1 - S, 0), (0, 0))
+        )
     return out, (new_conv.astype(jnp.bfloat16), hT)
 
 
@@ -186,6 +201,52 @@ def cache_specs(cfg: ModelConfig, batch: int, max_seq: int) -> dict:
     }
 
 
+# ---------------------------------------------------------------------------
+# Paged serving path — Mamba state is O(1) per slot, so "paged" serving
+# needs no page pool at all: chunked prefill writes the slot's recurrent
+# state in place (admission without any full-cache scatter), and decode is
+# the ordinary batched step.
+# ---------------------------------------------------------------------------
+
+
+def paged_cache_specs(cfg: ModelConfig, n_slots: int, n_pages: int,
+                      page_size: int) -> dict:
+    return cache_specs(cfg, n_slots, 0)
+
+
+def prefill_chunk_fn(params, cache, batch, cfg: ModelConfig, *, offset: int):
+    slot = batch["slot"]
+    valid = batch["valid"]
+    x = ll.embed_lookup(params, batch["tokens"])          # (1, C, d)
+    conv_sl = jax.lax.dynamic_slice_in_dim(cache["conv"], slot, 1, axis=1)
+    ssm_sl = jax.lax.dynamic_slice_in_dim(cache["ssm"], slot, 1, axis=1)
+    if offset == 0:  # fresh admission: ignore whatever the slot last held
+        conv_sl = jnp.zeros_like(conv_sl)
+        ssm_sl = jnp.zeros_like(ssm_sl)
+
+    def body(carry, xs):
+        lp, cs, ss = xs
+        out, (ncs, nss) = _block(lp, carry, cfg, conv_state=cs, ssm_state=ss,
+                                 return_state=True, valid=valid)
+        return out, (ncs, nss)
+
+    x, (convs, ssms) = jax.lax.scan(body, x, (params["layers"], conv_sl,
+                                              ssm_sl),
+                                    unroll=tracing.scan_unroll())
+    x = ops.rmsnorm(x, params["final_ln"], cfg.norm_eps)
+    last = jax.lax.dynamic_slice_in_dim(x, valid - 1, 1, axis=1)
+    logits = ll.logits_last(params, last[:, 0], cfg)
+    new_cache = {
+        "conv": jax.lax.dynamic_update_slice_in_dim(
+            cache["conv"], convs.astype(cache["conv"].dtype), slot, axis=1
+        ),
+        "ssm": jax.lax.dynamic_update_slice_in_dim(
+            cache["ssm"], ssms.astype(cache["ssm"].dtype), slot, axis=1
+        ),
+    }
+    return logits, new_cache
+
+
 def make_model(cfg: ModelConfig) -> ModelFns:
     return ModelFns(
         cfg=cfg,
@@ -195,4 +256,7 @@ def make_model(cfg: ModelConfig) -> ModelFns:
         prefill=functools.partial(prefill_fn, cfg=cfg),
         decode_step=functools.partial(decode_fn, cfg=cfg),
         input_specs=functools.partial(standard_input_specs, cfg),
+        paged_cache_specs=functools.partial(paged_cache_specs, cfg),
+        prefill_chunk=functools.partial(prefill_chunk_fn, cfg=cfg),
+        decode_paged=functools.partial(decode_fn, cfg=cfg),
     )

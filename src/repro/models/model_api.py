@@ -107,6 +107,24 @@ class ModelFns:
     # inputs for each shape kind: returns dict of ShapeDtypeStruct
     input_specs: Callable[[ShapeConfig], dict]
 
+    # paged serving path (optional). Families that support the paged KV
+    # cache expose:
+    # - paged_cache_specs(n_slots, n_pages, page_size) -> dict of PSpec —
+    #   sequence-indexed leaves become shared page pools
+    #   (n_pages, page_size, ...); O(1) per-slot state (SSM/conv) keeps its
+    #   dense (n_slots, ...) layout;
+    # - prefill_chunk(params, cache, batch, *, offset) — process one prompt
+    #   chunk at absolute position ``offset`` (static), writing K/V pages /
+    #   recurrent state in place; batch carries tokens (1, C), valid, slot,
+    #   page_table (max_pages,); returns (last-valid-token logits, cache);
+    # - decode_paged(params, cache, batch) — one batched token step; batch
+    #   carries tokens (B, 1), positions (B,), page_table (B, max_pages).
+    paged_cache_specs: Callable[..., Pytree] | None = None
+    prefill_chunk: Callable[..., tuple[jax.Array, Pytree]] | None = None
+    decode_paged: Callable[
+        [Pytree, Pytree, dict], tuple[jax.Array, Pytree]
+    ] | None = None
+
     def init(self, rng: jax.Array, dtype=jnp.float32) -> Pytree:
         return init_from_specs(self.param_specs, rng, dtype)
 
@@ -129,6 +147,39 @@ class ModelFns:
 
     def abstract_cache(self, batch: int, max_seq: int, dtype=jnp.bfloat16) -> Pytree:
         specs = self.cache_specs(batch, max_seq)
+        return jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, _cache_dtype(s, dtype)),
+            specs,
+            is_leaf=lambda x: isinstance(x, PSpec),
+        )
+
+    # ---- paged serving -----------------------------------------------------
+
+    @property
+    def supports_paged(self) -> bool:
+        return (
+            self.paged_cache_specs is not None
+            and self.prefill_chunk is not None
+            and self.decode_paged is not None
+        )
+
+    def init_paged_cache(self, n_slots: int, n_pages: int, page_size: int,
+                         dtype=jnp.bfloat16) -> Pytree:
+        specs = self.paged_cache_specs(n_slots, n_pages, page_size)
+        return jax.tree.map(
+            lambda s: jnp.zeros(s.shape, _cache_dtype(s, dtype)),
+            specs,
+            is_leaf=lambda x: isinstance(x, PSpec),
+        )
+
+    def paged_cache_axes(self, n_slots: int, n_pages: int,
+                         page_size: int) -> Pytree:
+        return axes_from_specs(self.paged_cache_specs(n_slots, n_pages,
+                                                      page_size))
+
+    def abstract_paged_cache(self, n_slots: int, n_pages: int, page_size: int,
+                             dtype=jnp.bfloat16) -> Pytree:
+        specs = self.paged_cache_specs(n_slots, n_pages, page_size)
         return jax.tree.map(
             lambda s: jax.ShapeDtypeStruct(s.shape, _cache_dtype(s, dtype)),
             specs,

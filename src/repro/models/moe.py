@@ -374,6 +374,116 @@ def cache_specs(cfg: ModelConfig, batch: int, max_seq: int) -> dict:
     }
 
 
+# ---------------------------------------------------------------------------
+# Paged serving path
+# ---------------------------------------------------------------------------
+
+
+def paged_cache_specs(cfg: ModelConfig, n_slots: int, n_pages: int,
+                      page_size: int) -> dict:
+    L, K, dh = cfg.n_layers, cfg.n_kv_heads, cfg.d_head
+    axes = ("layers", "pages", "page", "kv_heads", "head_dim")
+    return {
+        "k_pages": PSpec((L, n_pages, page_size, K, dh), axes, init="zeros"),
+        "v_pages": PSpec((L, n_pages, page_size, K, dh), axes, init="zeros"),
+    }
+
+
+def prefill_chunk_fn(params, cache, batch, cfg: ModelConfig, *, offset: int):
+    """Chunked prefill through dense + MoE layers, K/V written into pages."""
+    table = batch["page_table"]
+    nd = cfg.first_k_dense
+    x = ll.embed_lookup(params, batch["tokens"])          # (1, C, d)
+
+    def dense_body(carry, xs):
+        lp, kp, vp = xs
+        h = ops.rmsnorm(carry, lp["attn"]["ln"], cfg.norm_eps)
+        a, kp, vp = ll.attn_prefill_chunk(lp["attn"], h, cfg, offset,
+                                          kp, vp, table)
+        y = carry + a
+        h = ops.rmsnorm(y, lp["mlp"]["ln"], cfg.norm_eps)
+        return y + ll.mlp_forward(lp["mlp"], h, cfg), (kp, vp)
+
+    def moe_body(carry, xs):
+        lp, kp, vp = xs
+        h = ops.rmsnorm(carry, lp["attn"]["ln"], cfg.norm_eps)
+        a, kp, vp = ll.attn_prefill_chunk(lp["attn"], h, cfg, offset,
+                                          kp, vp, table)
+        y = carry + a
+        h = ops.rmsnorm(y, lp["mlp"]["ln"], cfg.norm_eps)
+        z, _ = moe_mlp_forward(lp["mlp"], h, cfg)
+        return y + z, (kp, vp)
+
+    kp, vp = cache["k_pages"], cache["v_pages"]
+    new_k, new_v = [], []
+    if nd:
+        x, (dk, dv) = jax.lax.scan(
+            dense_body, x, (params["dense_layers"], kp[:nd], vp[:nd]),
+            unroll=tracing.scan_unroll(),
+        )
+        new_k.append(dk)
+        new_v.append(dv)
+    x, (mk, mv) = jax.lax.scan(
+        moe_body, x, (params["moe_layers"], kp[nd:], vp[nd:]),
+        unroll=tracing.scan_unroll(),
+    )
+    new_k.append(mk)
+    new_v.append(mv)
+    x = ops.rmsnorm(x, params["final_ln"], cfg.norm_eps)
+    last = jax.lax.dynamic_slice_in_dim(x, batch["valid"] - 1, 1, axis=1)
+    logits = ll.logits_last(params, last[:, 0], cfg)
+    ks = jnp.concatenate(new_k, 0) if len(new_k) > 1 else new_k[0]
+    vs = jnp.concatenate(new_v, 0) if len(new_v) > 1 else new_v[0]
+    return logits, {"k_pages": ks, "v_pages": vs}
+
+
+def decode_paged_fn(params, cache, batch, cfg: ModelConfig):
+    positions = batch["positions"]
+    table = batch["page_table"]
+    x = ll.embed_lookup(params, batch["tokens"])
+    nd = cfg.first_k_dense
+
+    def dense_body(carry, xs):
+        lp, kp, vp = xs
+        h = ops.rmsnorm(carry, lp["attn"]["ln"], cfg.norm_eps)
+        a, kp, vp = ll.attn_decode_paged(lp["attn"], h, cfg, positions,
+                                         kp, vp, table)
+        y = carry + a
+        h = ops.rmsnorm(y, lp["mlp"]["ln"], cfg.norm_eps)
+        return y + ll.mlp_forward(lp["mlp"], h, cfg), (kp, vp)
+
+    def moe_body(carry, xs):
+        lp, kp, vp = xs
+        h = ops.rmsnorm(carry, lp["attn"]["ln"], cfg.norm_eps)
+        a, kp, vp = ll.attn_decode_paged(lp["attn"], h, cfg, positions,
+                                         kp, vp, table)
+        y = carry + a
+        h = ops.rmsnorm(y, lp["mlp"]["ln"], cfg.norm_eps)
+        z, _ = moe_mlp_forward(lp["mlp"], h, cfg)
+        return y + z, (kp, vp)
+
+    kp, vp = cache["k_pages"], cache["v_pages"]
+    new_k, new_v = [], []
+    if nd:
+        x, (dk, dv) = jax.lax.scan(
+            dense_body, x, (params["dense_layers"], kp[:nd], vp[:nd]),
+            unroll=tracing.scan_unroll(),
+        )
+        new_k.append(dk)
+        new_v.append(dv)
+    x, (mk, mv) = jax.lax.scan(
+        moe_body, x, (params["moe_layers"], kp[nd:], vp[nd:]),
+        unroll=tracing.scan_unroll(),
+    )
+    new_k.append(mk)
+    new_v.append(mv)
+    x = ops.rmsnorm(x, params["final_ln"], cfg.norm_eps)
+    logits = ll.logits_last(params, x[:, 0], cfg)
+    ks = jnp.concatenate(new_k, 0) if len(new_k) > 1 else new_k[0]
+    vs = jnp.concatenate(new_v, 0) if len(new_v) > 1 else new_v[0]
+    return logits, {"k_pages": ks, "v_pages": vs}
+
+
 def make_model(cfg: ModelConfig) -> ModelFns:
     return ModelFns(
         cfg=cfg,
@@ -383,4 +493,7 @@ def make_model(cfg: ModelConfig) -> ModelFns:
         prefill=functools.partial(prefill_fn, cfg=cfg),
         decode_step=functools.partial(decode_fn, cfg=cfg),
         input_specs=functools.partial(standard_input_specs, cfg),
+        paged_cache_specs=functools.partial(paged_cache_specs, cfg),
+        prefill_chunk=functools.partial(prefill_chunk_fn, cfg=cfg),
+        decode_paged=functools.partial(decode_paged_fn, cfg=cfg),
     )

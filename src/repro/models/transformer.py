@@ -168,6 +168,70 @@ def cache_specs(cfg: ModelConfig, batch: int, max_seq: int) -> dict:
     }
 
 
+# ---------------------------------------------------------------------------
+# Paged serving path
+# ---------------------------------------------------------------------------
+
+
+def paged_cache_specs(cfg: ModelConfig, n_slots: int, n_pages: int,
+                      page_size: int) -> dict:
+    L, K, dh = cfg.n_layers, cfg.n_kv_heads, cfg.d_head
+    axes = ("layers", "pages", "page", "kv_heads", "head_dim")
+    return {
+        "k_pages": PSpec((L, n_pages, page_size, K, dh), axes, init="zeros"),
+        "v_pages": PSpec((L, n_pages, page_size, K, dh), axes, init="zeros"),
+    }
+
+
+def prefill_chunk_fn(params, cache, batch, cfg: ModelConfig, *, offset: int):
+    """One prompt chunk at static absolute position ``offset``: K/V written
+    directly into the slot's pages, logits taken at the true final token
+    (``valid - 1`` within the chunk) — no bucket padding, no right-align."""
+    table = batch["page_table"]
+    x = ll.embed_lookup(params, batch["tokens"])          # (1, C, d)
+
+    def body(carry, xs):
+        lp, kp, vp = xs
+        h = ops.rmsnorm(carry, lp["attn"]["ln"], cfg.norm_eps)
+        a, kp, vp = ll.attn_prefill_chunk(lp["attn"], h, cfg, offset,
+                                          kp, vp, table)
+        y = carry + a
+        h = ops.rmsnorm(y, lp["mlp"]["ln"], cfg.norm_eps)
+        return y + ll.mlp_forward(lp["mlp"], h, cfg), (kp, vp)
+
+    x, (ks, vs) = jax.lax.scan(
+        body, x, (params["layers"], cache["k_pages"], cache["v_pages"]),
+        unroll=tracing.scan_unroll(),
+    )
+    x = ops.rmsnorm(x, params["final_ln"], cfg.norm_eps)
+    last = jax.lax.dynamic_slice_in_dim(x, batch["valid"] - 1, 1, axis=1)
+    logits = ll.logits_last(params, last[:, 0], cfg)
+    return logits, {"k_pages": ks, "v_pages": vs}
+
+
+def decode_paged_fn(params, cache, batch, cfg: ModelConfig):
+    positions = batch["positions"]
+    table = batch["page_table"]
+    x = ll.embed_lookup(params, batch["tokens"])
+
+    def body(carry, xs):
+        lp, kp, vp = xs
+        h = ops.rmsnorm(carry, lp["attn"]["ln"], cfg.norm_eps)
+        a, kp, vp = ll.attn_decode_paged(lp["attn"], h, cfg, positions,
+                                         kp, vp, table)
+        y = carry + a
+        h = ops.rmsnorm(y, lp["mlp"]["ln"], cfg.norm_eps)
+        return y + ll.mlp_forward(lp["mlp"], h, cfg), (kp, vp)
+
+    x, (ks, vs) = jax.lax.scan(
+        body, x, (params["layers"], cache["k_pages"], cache["v_pages"]),
+        unroll=tracing.scan_unroll(),
+    )
+    x = ops.rmsnorm(x, params["final_ln"], cfg.norm_eps)
+    logits = ll.logits_last(params, x[:, 0], cfg)
+    return logits, {"k_pages": ks, "v_pages": vs}
+
+
 def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
     def extra(cfg, shape):
         if cfg.family != "vlm" or shape.kind == "decode":
@@ -191,6 +255,9 @@ def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
 
 
 def make_model(cfg: ModelConfig) -> ModelFns:
+    # VLM prefill interleaves image embeddings — not chunkable yet, so the
+    # paged serving path is only wired for the text-only dense families.
+    paged = cfg.family != "vlm"
     return ModelFns(
         cfg=cfg,
         param_specs=build_specs(cfg),
@@ -199,4 +266,13 @@ def make_model(cfg: ModelConfig) -> ModelFns:
         prefill=functools.partial(prefill_fn, cfg=cfg),
         decode_step=functools.partial(decode_fn, cfg=cfg),
         input_specs=functools.partial(input_specs, cfg),
+        paged_cache_specs=(
+            functools.partial(paged_cache_specs, cfg) if paged else None
+        ),
+        prefill_chunk=(
+            functools.partial(prefill_chunk_fn, cfg=cfg) if paged else None
+        ),
+        decode_paged=(
+            functools.partial(decode_paged_fn, cfg=cfg) if paged else None
+        ),
     )

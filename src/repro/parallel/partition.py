@@ -48,12 +48,15 @@ MODEL_PRIMARY = {
 }
 
 # Ordered fallback receivers of "model" when no primary dim sharded.
-MODEL_FALLBACK = ("embed_in", "embed_out", "seq_fallback")
+# "pages" lets a paged KV pool shard over physical pages when the kv-head
+# count doesn't divide the model axis (pages are independent, page ids are
+# global — the gather/prefetch indexes the sharded dim).
+MODEL_FALLBACK = ("embed_in", "embed_out", "seq_fallback", "pages")
 
 # Dims that never shard.
 NEVER = {
     "layers", "embed", "head_dim", "state", "conv", "dt_rank", "q_per_kv",
-    "null", "null_i32", "seq", None,
+    "null", "null_i32", "seq", "page", None,
 }
 
 DATA_AXES_PREFERENCE = (("pod", "data"), ("data",))

@@ -1,13 +1,32 @@
-"""Serving substrate: sharded KV caches + a batched request engine.
+"""Serving substrate: a paged KV cache + a batched request engine.
 
 A serving cloudlet runs one :class:`~repro.serving.engine.ServeEngine` per
-guest; the engine's full state (params handle, caches, slot bookkeeping)
-is snapshotable, so the ad hoc continuity protocol covers inference jobs
-exactly as it covers training jobs.
+guest. The default cache layout is **paged**: sequence-indexed cache
+tensors live in a shared pool of fixed-size pages addressed through
+per-slot page tables (:class:`~repro.serving.kvcache.PagePool`), pages are
+allocated at admission and freed on completion, and prompts enter via
+**chunked prefill at true length** — no bucket padding, no full-cache slot
+scatter. Decode runs the paged flash-decode kernel
+(:mod:`repro.kernels.paged_decode_attention`).
+
+The engine's full state (params handle, page pool + tables or the legacy
+dense cache, slot bookkeeping, queued requests *including* modality
+extras) is snapshotable, so the ad hoc continuity protocol covers
+inference jobs exactly as it covers training jobs — and paged snapshots
+scale with the working set, not ``n_slots × max_seq``.
 """
 
 from repro.serving.engine import Request, ServeEngine
-from repro.serving.kvcache import init_cache, scatter_slot, cache_shardings
+from repro.serving.kvcache import (
+    PagePool,
+    cache_shardings,
+    init_cache,
+    init_paged_cache,
+    paged_cache_shardings,
+    pages_needed,
+    scatter_slot,
+)
 
-__all__ = ["ServeEngine", "Request", "init_cache", "scatter_slot",
-           "cache_shardings"]
+__all__ = ["ServeEngine", "Request", "PagePool", "init_cache",
+           "init_paged_cache", "pages_needed", "scatter_slot",
+           "cache_shardings", "paged_cache_shardings"]

@@ -1,17 +1,36 @@
-"""Batched serving engine with continuous batching + snapshotable state.
+"""Batched serving engine: continuous batching over a paged KV cache.
 
-The engine owns ``n_slots`` decode lanes over a shared sharded cache.
-Requests are admitted into free slots (prefill, bucket-padded to limit
-recompilation), then all active slots advance together through one
-batched ``decode_step`` per :meth:`step`. Greedy sampling keeps runs
-deterministic — a restored engine replays identically, which is what lets
-the ad hoc cloud's continuity protocol cover serving guests: an engine
-snapshot (cache + slot bookkeeping) restored on another host continues
-mid-generation without re-prefilling.
+The engine owns ``n_slots`` decode lanes. By default (for families that
+implement the paged protocol) the cache is **paged**: a shared pool of
+fixed-size pages plus per-slot page tables (see
+:mod:`repro.serving.kvcache`). Admission runs **chunked prefill at true
+prompt length** — the prompt is processed in fixed-size chunks whose K/V
+(or recurrent state) is written straight into the slot's pages, so
+admission costs O(prompt pages) with no bucket padding, no
+right-alignment, and no full-cache copy; ``lengths`` tracks real token
+counts. Pages are allocated at admission (enough for prompt +
+``max_new_tokens``, so decode can never run out mid-flight) and freed on
+completion; when the pool is exhausted, requests simply wait in the queue.
+Decode advances all active slots through one batched ``decode_paged`` step
+using the paged flash-decode kernel.
+
+The legacy dense path (``paged=False``) keeps the original
+``(n_slots, max_seq)`` cache with bucket-padded prefill — still used by
+families without paged support (enc-dec, VLM).
+
+Greedy sampling keeps runs deterministic — a restored engine replays
+identically, which is what lets the ad hoc cloud's continuity protocol
+cover serving guests: an engine snapshot (page pool + page tables + slot
+bookkeeping, or the dense cache) restored on another host continues
+mid-generation without re-prefilling. Paged snapshots are proportional to
+the pool size, not ``n_slots × max_seq`` — smaller continuity blobs on
+harvested hosts.
 """
 
 from __future__ import annotations
 
+import base64
+import json
 from dataclasses import dataclass, field
 from typing import Any
 
@@ -21,7 +40,14 @@ import numpy as np
 
 from repro.checkpoint.serializer import deserialize_tree, serialize_tree
 from repro.models.model_api import ModelFns
-from repro.serving.kvcache import expand_prefill_cache, init_cache, scatter_slot
+from repro.serving.kvcache import (
+    PagePool,
+    expand_prefill_cache,
+    init_cache,
+    init_paged_cache,
+    pages_needed,
+    scatter_slot,
+)
 
 Pytree = Any
 
@@ -49,6 +75,29 @@ def _bucket(n: int, minimum: int = 32) -> int:
     return b
 
 
+def _encode_extra(extra: dict) -> dict:
+    """JSON-encode modality arrays (frames/embeds) for the snapshot meta."""
+    out = {}
+    for k, v in extra.items():
+        a = np.asarray(v)
+        out[k] = {
+            "dtype": str(a.dtype),
+            "shape": list(a.shape),
+            "data": base64.b64encode(np.ascontiguousarray(a).tobytes()).decode(),
+        }
+    return out
+
+
+def _decode_extra(enc: dict) -> dict:
+    out = {}
+    for k, ent in enc.items():
+        dt = np.dtype(ent["dtype"])
+        out[k] = np.frombuffer(
+            base64.b64decode(ent["data"]), dt
+        ).reshape(ent["shape"])
+    return out
+
+
 class ServeEngine:
     def __init__(
         self,
@@ -58,12 +107,23 @@ class ServeEngine:
         n_slots: int = 8,
         max_seq: int = 1024,
         cache_dtype=jnp.bfloat16,
+        paged: bool | None = None,
+        page_size: int = 64,
+        n_pages: int | None = None,
+        prefill_chunk: int = 256,
     ):
         self.model = model
         self.params = params
         self.n_slots = n_slots
         self.max_seq = max_seq
-        self.cache = init_cache(model, n_slots, max_seq, cache_dtype)
+        if paged is None:
+            paged = model.supports_paged
+        elif paged and not model.supports_paged:
+            raise ValueError(
+                f"{model.cfg.arch_id}: family has no paged serving path; "
+                "use paged=False"
+            )
+        self.paged = paged
         self.lengths = np.zeros((n_slots,), np.int32)
         self.last_token = np.zeros((n_slots,), np.int32)
         self.slot_req: list[int | None] = [None] * n_slots
@@ -72,15 +132,57 @@ class ServeEngine:
         self._req_counter = 0
         self.steps = 0
 
-        self._prefill = jax.jit(model.prefill)
-        self._decode = jax.jit(model.decode_step)
-        self._scatter = jax.jit(scatter_slot)
+        if paged:
+            self.page_size = page_size
+            self.max_pages = -(-max_seq // page_size)
+            # default pool: full capacity (one spare page for scratch);
+            # pass a smaller n_pages to oversubscribe slots against the pool
+            self.n_pages = (
+                n_pages if n_pages is not None
+                else n_slots * self.max_pages + 1
+            )
+            self.pool = PagePool(self.n_pages)
+            self.page_table = np.zeros((n_slots, self.max_pages), np.int32)
+            self.slot_pages: list[list[int]] = [[] for _ in range(n_slots)]
+            self.prefill_chunk = min(prefill_chunk,
+                                     self.max_pages * page_size)
+            self.cache = init_paged_cache(model, n_slots, self.n_pages,
+                                          page_size, cache_dtype)
+            self._decode_paged = jax.jit(model.decode_paged)
+            self._prefill_chunk = jax.jit(
+                model.prefill_chunk, static_argnames=("offset",)
+            )
+        else:
+            self.cache = init_cache(model, n_slots, max_seq, cache_dtype)
+            self._prefill = jax.jit(model.prefill)
+            self._decode = jax.jit(model.decode_step)
+            self._scatter = jax.jit(scatter_slot)
 
     # ------------------------------------------------------------- interface
     def submit(self, prompt: list[int], *, max_new_tokens: int = 16,
                eos_id: int | None = None, extra: dict | None = None) -> Request:
+        extra = dict(extra or {})
+        if not 1 <= len(prompt) < self.max_seq:
+            raise ValueError(
+                f"prompt length {len(prompt)} outside [1, {self.max_seq})"
+            )
+        if self.paged:
+            if extra:
+                raise ValueError(
+                    "modality extras are not supported by chunked prefill "
+                    "yet; construct the engine with paged=False"
+                )
+            need = pages_needed(
+                min(len(prompt) + max_new_tokens, self.max_seq),
+                self.page_size,
+            )
+            if need > self.n_pages - 1:
+                raise ValueError(
+                    f"request needs {need} pages but the pool only has "
+                    f"{self.n_pages - 1} allocatable pages"
+                )
         req = Request(self._req_counter, list(prompt), max_new_tokens, eos_id,
-                      dict(extra or {}))
+                      extra)
         self._req_counter += 1
         self.requests[req.req_id] = req
         self.queue.append(req)
@@ -98,9 +200,19 @@ class ServeEngine:
             return 0
         tokens = jnp.asarray(self.last_token)[:, None]
         positions = jnp.asarray(self.lengths)
-        logits, self.cache = self._decode(
-            self.params, self.cache, {"tokens": tokens, "positions": positions}
-        )
+        if self.paged:
+            batch = {
+                "tokens": tokens,
+                "positions": positions,
+                "page_table": jnp.asarray(self.page_table),
+            }
+            logits, self.cache = self._decode_paged(self.params, self.cache,
+                                                    batch)
+        else:
+            logits, self.cache = self._decode(
+                self.params, self.cache,
+                {"tokens": tokens, "positions": positions},
+            )
         next_tokens = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
         for i in active:
             req = self.requests[self.slot_req[i]]
@@ -115,7 +227,7 @@ class ServeEngine:
             ):
                 req.done = True
                 req.slot = None
-                self.slot_req[i] = None
+                self._release_slot(i)
         self.steps += 1
         return len(active)
 
@@ -129,9 +241,68 @@ class ServeEngine:
     def _admit(self) -> None:
         free = [i for i, r in enumerate(self.slot_req) if r is None]
         while free and self.queue:
-            slot = free.pop(0)
-            req = self.queue.pop(0)
-            self._prefill_into(slot, req)
+            req = self.queue[0]
+            if self.paged:
+                need = pages_needed(
+                    min(len(req.prompt) + req.max_new_tokens, self.max_seq),
+                    self.page_size,
+                )
+                pages = self.pool.alloc(need)
+                if pages is None:
+                    return  # pool exhausted: wait for completions (FIFO)
+                self.queue.pop(0)
+                self._prefill_paged(free.pop(0), req, pages)
+            else:
+                self.queue.pop(0)
+                self._prefill_into(free.pop(0), req)
+
+    def _release_slot(self, slot: int) -> None:
+        self.slot_req[slot] = None
+        self.lengths[slot] = 0
+        if self.paged:
+            self.pool.free(self.slot_pages[slot])
+            self.slot_pages[slot] = []
+            self.page_table[slot, :] = 0  # scratch page: inert lane writes
+
+    def _finish_admit(self, slot: int, req: Request, first: int,
+                      length: int) -> None:
+        req.generated.append(first)
+        req.slot = slot
+        self.slot_req[slot] = req.req_id
+        self.lengths[slot] = length
+        self.last_token[slot] = first
+        if req.eos_id is not None and first == req.eos_id:
+            req.done = True
+            req.slot = None
+            self._release_slot(slot)
+
+    def _prefill_paged(self, slot: int, req: Request,
+                       pages: list[int]) -> None:
+        """Chunked prefill at true prompt length: each chunk's K/V (or
+        recurrent state) is written straight into the slot's pages."""
+        plen = len(req.prompt)
+        assert plen >= 1 and plen < self.max_seq, plen
+        self.slot_pages[slot] = pages
+        self.page_table[slot, :] = 0
+        self.page_table[slot, : len(pages)] = pages
+        table_row = jnp.asarray(self.page_table[slot])
+        C = self.prefill_chunk
+        logits = None
+        for off in range(0, plen, C):
+            part = req.prompt[off:off + C]
+            toks = np.zeros((1, C), np.int32)
+            toks[0, : len(part)] = part
+            batch = {
+                "tokens": jnp.asarray(toks),
+                "valid": jnp.asarray(len(part), jnp.int32),
+                "slot": jnp.asarray(slot, jnp.int32),
+                "page_table": table_row,
+            }
+            logits, self.cache = self._prefill_chunk(
+                self.params, self.cache, batch, offset=off
+            )
+        first = int(np.asarray(jnp.argmax(logits, axis=-1))[0])
+        self._finish_admit(slot, req, first, plen)
 
     def _prefill_into(self, slot: int, req: Request) -> None:
         plen = len(req.prompt)
@@ -153,16 +324,12 @@ class ServeEngine:
             pcache, jax.tree.map(lambda c: c[:, :1], self.cache)
         )
         self.cache = self._scatter(self.cache, pcache, jnp.asarray(slot))
-        first = int(np.asarray(jnp.argmax(logits[-1] if logits.ndim > 2 else logits, axis=-1))[0])
-        req.generated.append(first)
-        req.slot = slot
-        self.slot_req[slot] = req.req_id
-        self.lengths[slot] = bucket
-        self.last_token[slot] = first
-        if req.eos_id is not None and first == req.eos_id:
-            req.done = True
-            req.slot = None
-            self.slot_req[slot] = None
+        # logits may be (B, V) (logits_last) or (B, S, V); the sampled token
+        # comes from the *last* position — position 0 is a pad row under
+        # right-aligned bucketing
+        row = logits[0, -1] if logits.ndim == 3 else logits[0]
+        first = int(np.asarray(jnp.argmax(row)))
+        self._finish_admit(slot, req, first, bucket)
 
     # -------------------------------------------------------------- snapshot
     def snapshot(self) -> bytes:
@@ -172,10 +339,11 @@ class ServeEngine:
             "last_token": self.last_token,
             "steps": np.asarray(self.steps, np.int64),
         }
+        if self.paged:
+            state["page_table"] = self.page_table
         blob = serialize_tree(state)
-        import json
-
         meta = {
+            "paged": self.paged,
             "slot_req": self.slot_req,
             "queue": [r.req_id for r in self.queue],
             "requests": {
@@ -186,33 +354,53 @@ class ServeEngine:
                     "generated": r.generated,
                     "slot": r.slot,
                     "done": r.done,
+                    "extra": _encode_extra(r.extra),
                 }
                 for r in self.requests.values()
             },
         }
+        if self.paged:
+            meta["page_size"] = self.page_size
+            meta["n_pages"] = self.n_pages
+            meta["free_pages"] = [int(p) for p in self.pool._free]
+            meta["slot_pages"] = [
+                [int(p) for p in ps] for ps in self.slot_pages
+            ]
         mb = json.dumps(meta).encode()
         return len(mb).to_bytes(4, "little") + mb + blob
 
     def restore(self, blob: bytes) -> None:
-        import json
-
         mlen = int.from_bytes(blob[:4], "little")
         meta = json.loads(blob[4 : 4 + mlen].decode())
+        assert meta.get("paged", False) == self.paged, (
+            "snapshot/engine paged-mode mismatch"
+        )
         like = {
             "cache": self.cache,
             "lengths": self.lengths,
             "last_token": self.last_token,
             "steps": np.asarray(self.steps, np.int64),
         }
+        if self.paged:
+            assert meta["page_size"] == self.page_size
+            assert meta["n_pages"] == self.n_pages
+            like["page_table"] = self.page_table
         state = deserialize_tree(blob[4 + mlen :], like)
         self.cache = jax.tree.map(jnp.asarray, state["cache"])
         self.lengths = np.asarray(state["lengths"]).copy()
         self.last_token = np.asarray(state["last_token"]).copy()
         self.steps = int(state["steps"])
+        if self.paged:
+            self.page_table = np.asarray(state["page_table"]).copy()
+            self.pool.restore(meta["free_pages"])
+            self.slot_pages = [
+                [int(p) for p in ps] for ps in meta["slot_pages"]
+            ]
         self.requests = {}
         for rid, kv in meta["requests"].items():
             req = Request(
-                int(rid), kv["prompt"], kv["max_new_tokens"], kv["eos_id"]
+                int(rid), kv["prompt"], kv["max_new_tokens"], kv["eos_id"],
+                _decode_extra(kv.get("extra", {})),
             )
             req.generated = kv["generated"]
             req.slot = kv["slot"]

@@ -1,14 +1,25 @@
-"""Sharded decode caches, generic over architecture families.
+"""Serving caches: dense per-slot caches and the paged KV cache.
 
 Every model family exposes ``cache_specs(batch, max_seq)`` (KV tensors for
 attention models, conv+SSM states for Mamba, both for hybrids, self+cross
 for enc-dec). This module turns those specs into allocated/sharded caches
-and provides the slot-scatter primitive continuous batching needs: write a
-freshly prefilled (batch=1) cache into slot ``i`` of the engine cache.
+and provides the slot-scatter primitive the legacy dense path needs: write
+a freshly prefilled (batch=1) cache into slot ``i`` of the engine cache.
+
+**Paged cache** (the default serving layout): families that implement
+``paged_cache_specs(n_slots, n_pages, page_size)`` keep sequence-indexed
+cache leaves in a *shared pool* of fixed-size pages,
+``(layers, n_pages, page_size, kv_heads, head_dim)``, addressed through
+per-slot page tables. :class:`PagePool` is the host-side allocator:
+physical page 0 is reserved as a scratch page (inactive decode lanes point
+their table rows at it, so their batched writes land somewhere harmless),
+pages are handed out at admission (O(prompt pages), no full-cache copy)
+and returned when a request completes. O(1) recurrent state (SSM/conv)
+keeps its dense ``(n_slots, ...)`` layout.
 
 Sharding: the partition rule engine maps ``kv_heads → model`` when the
-head count divides the axis, else falls back to sequence sharding
-(``seq_fallback → model``) — how 500k-token caches fit one host group.
+head count divides the axis, else falls back (``seq_fallback``/``pages``
+→ model) — how 500k-token caches fit one host group.
 """
 
 from __future__ import annotations
@@ -65,3 +76,74 @@ def expand_prefill_cache(prefill_cache: Pytree, like: Pytree) -> Pytree:
         return jnp.pad(p, pads).astype(l.dtype)
 
     return jax.tree.map(pad, prefill_cache, like)
+
+
+# ---------------------------------------------------------------------------
+# Paged cache
+# ---------------------------------------------------------------------------
+
+SCRATCH_PAGE = 0  # physical page 0 is never allocated
+
+
+def pages_needed(n_tokens: int, page_size: int) -> int:
+    """Pages required to hold ``n_tokens`` cache entries."""
+    return max(1, -(-n_tokens // page_size))
+
+
+class PagePool:
+    """Host-side free-list allocator over ``n_pages`` physical pages.
+
+    Page 0 (:data:`SCRATCH_PAGE`) is reserved: cleared page-table rows
+    point at it so inactive decode lanes scatter into a sacrificial page
+    instead of a page another request now owns. Invariants (tested):
+    allocations are disjoint, ``available + outstanding == n_pages - 1``,
+    and a page is never handed out twice without being freed in between.
+    """
+
+    def __init__(self, n_pages: int):
+        assert n_pages >= 2, "need at least one allocatable page + scratch"
+        self.n_pages = n_pages
+        self._free = list(range(1, n_pages))
+        self._allocated: set[int] = set()
+
+    @property
+    def available(self) -> int:
+        return len(self._free)
+
+    @property
+    def outstanding(self) -> int:
+        return len(self._allocated)
+
+    def alloc(self, n: int) -> list[int] | None:
+        """Pop ``n`` pages, or None (and no side effects) if exhausted."""
+        if n > len(self._free):
+            return None
+        pages, self._free = self._free[:n], self._free[n:]
+        self._allocated.update(pages)
+        return pages
+
+    def free(self, pages: list[int]) -> None:
+        for p in pages:
+            assert p in self._allocated, f"double free of page {p}"
+            self._allocated.discard(p)
+        self._free.extend(pages)
+
+    def restore(self, free: list[int]) -> None:
+        """Reset the allocator from a snapshot's free list."""
+        free = [int(p) for p in free]
+        assert SCRATCH_PAGE not in free
+        self._free = free
+        self._allocated = set(range(1, self.n_pages)) - set(free)
+
+
+def init_paged_cache(model: ModelFns, n_slots: int, n_pages: int,
+                     page_size: int, dtype=jnp.bfloat16) -> Pytree:
+    return model.init_paged_cache(n_slots, n_pages, page_size, dtype)
+
+
+def paged_cache_shardings(model: ModelFns, n_slots: int, n_pages: int,
+                          page_size: int, mesh,
+                          dtype=jnp.bfloat16) -> Pytree:
+    axes = model.paged_cache_axes(n_slots, n_pages, page_size)
+    abstract = model.abstract_paged_cache(n_slots, n_pages, page_size, dtype)
+    return tree_shardings(axes, abstract, mesh)

@@ -1,6 +1,9 @@
 """Hypothesis property tests for the system's invariants."""
 
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.reliability import host_reliability

@@ -84,6 +84,52 @@ def test_eos_terminates_early(qwen):
     assert req.generated[-1] == eos or len(req.generated) == 10
 
 
+def test_snapshot_preserves_request_extra(qwen):
+    """Regression: modality inputs (frames/embeds) in ``Request.extra`` must
+    survive snapshot/restore — a restored engine replays queued multimodal
+    prefills with their original arrays."""
+    cfg, model, params = qwen
+    eng = ServeEngine(model, params, n_slots=2, max_seq=96, paged=False)
+    embeds = np.arange(12, dtype=np.float32).reshape(1, 3, 4)
+    eng.submit(prompts(cfg, 1)[0], max_new_tokens=2,
+               extra={"embeds": embeds})
+    blob = eng.snapshot()
+    eng2 = ServeEngine(model, params, n_slots=2, max_seq=96, paged=False)
+    eng2.restore(blob)
+    restored = eng2.queue[0].extra
+    assert set(restored) == {"embeds"}
+    np.testing.assert_array_equal(np.asarray(restored["embeds"]), embeds)
+    assert restored["embeds"].dtype == embeds.dtype
+
+
+def test_bucketed_prefill_samples_last_position():
+    """Regression: when prefill returns full-sequence (B, S, V) logits, the
+    first token must be sampled from the LAST position — under right-aligned
+    bucketing position 0 is a pad row."""
+    import jax.numpy as jnp
+
+    S, V = 32, 7
+
+    class StubFns:
+        def init_cache(self, n_slots, max_seq, dtype):
+            return {"k": jnp.zeros((1, n_slots, max_seq, 1, 1), dtype)}
+
+        def prefill(self, params, batch):
+            s = batch["tokens"].shape[1]
+            logits = jnp.zeros((1, s, V))
+            logits = logits.at[0, 0, 5].set(1.0)    # pad-row argmax: 5
+            logits = logits.at[0, -1, 3].set(1.0)   # last-position argmax: 3
+            return logits, {"k": jnp.zeros((1, 1, s, 1, 1), jnp.bfloat16)}
+
+        decode_step = staticmethod(lambda *a: None)
+
+    eng = ServeEngine(StubFns(), params=None, n_slots=1, max_seq=S,
+                      paged=False)
+    req = eng.submit(list(range(1, 9)), max_new_tokens=2)
+    eng._admit()
+    assert req.generated[0] == 3
+
+
 @pytest.mark.parametrize("arch", ["falcon-mamba-7b", "zamba2-1.2b"])
 def test_stateful_families_serve(arch):
     cfg = REDUCED[arch]
