@@ -10,7 +10,12 @@ Sections:
 - straggler    — interference mitigation (low-interference rule)
 - kernel       — kernel micro-benchmarks
 - roofline     — per-cell roofline terms from dry-run artifacts
-- serving      — paged vs dense serving engine (BENCH_SERVING)
+- serving      — paged vs dense serving engine + copy-on-write prefix
+                 sharing vs the non-shared paged path (BENCH_SERVING;
+                 also written machine-readably to BENCH_SERVING.json at
+                 the repo root so the perf trajectory is tracked across
+                 PRs — run `python -m benchmarks.serving_bench
+                 --prefix-share` for the sharing scenario alone)
 """
 
 import argparse

@@ -1,6 +1,6 @@
-"""Serving-engine benchmark: paged KV cache + chunked prefill vs the dense
-bucketed engine (BENCH_SERVING — the first serving perf baseline).
+"""Serving-engine benchmark (BENCH_SERVING): two scenarios.
 
+**paged** — paged KV cache + chunked prefill vs the dense bucketed engine.
 For each slot count, a mixed-prompt-length workload (32–768 tokens,
 max_seq 1024) runs through both engines and the table reports:
 
@@ -16,13 +16,27 @@ max_seq 1024) runs through both engines and the table reports:
   exact unpadded-prefill reference on the rest (which the dense engine
   only approximates).
 
-Both engines see each workload once as warmup (covering every bucket size /
+**prefix-share** (``--prefix-share`` standalone) — copy-on-write prefix
+sharing vs the non-shared paged path on a system-prompt-heavy workload
+(N requests sharing one prompt prefix at several prefix lengths):
+
+- ``prefill tok``  — prompt tokens actually computed (suffix-only under
+  sharing) and tokens served from shared pages,
+- ``peakPg``/``cacheB/slot`` — high-water live pool pages and the bytes
+  they pin per slot (shared prefix pages are counted once, not per slot),
+- ``tok/s`` and token-for-token ``match`` against the non-shared engine.
+
+Engines see each workload once as warmup (covering every bucket size /
 chunk offset) before the measured pass, so the numbers are compile-free.
+Results are also written machine-readably to ``BENCH_SERVING.json`` at the
+repo root so the perf trajectory is tracked across PRs.
 """
 
 from __future__ import annotations
 
+import json
 import time
+from pathlib import Path
 
 import jax
 import jax.numpy as jnp
@@ -36,6 +50,14 @@ MAX_NEW = 16
 PROMPT_LENS = [32, 64, 128, 256, 512, 768, 32, 64]
 POW2 = {32, 64, 128, 256, 512, 1024}
 SLOT_COUNTS = [2, 4, 8]
+
+# prefix-share scenario: N requests sharing a common prompt prefix
+PREFIX_LENS = [128, 256, 512]
+PS_SUFFIX = 64
+PS_REQS = 8
+PS_SLOTS = 4
+
+JSON_PATH = Path(__file__).resolve().parents[1] / "BENCH_SERVING.json"
 
 
 def cache_bytes(engine) -> int:
@@ -59,9 +81,9 @@ def run_workload(engine, prompts, *, timed):
     if engine.paged:
         orig = engine._prefill_paged
 
-        def timed_admit(slot, req, pages):
+        def timed_admit(*args):
             t0 = time.perf_counter()
-            orig(slot, req, pages)
+            orig(*args)
             admissions.append(time.perf_counter() - t0)
 
         engine._prefill_paged = timed_admit
@@ -111,15 +133,17 @@ def exact_reference(model, params, prompt, n_new):
     return out
 
 
-def main(rows=None) -> list[dict]:
-    rows = rows if rows is not None else []
-    from repro.configs import REDUCED
-    from repro.models import get_model
+def _page_bytes(engine) -> int:
+    """Bytes pinned by one physical page across all paged cache leaves."""
+    return sum(
+        leaf.size // leaf.shape[1] * leaf.dtype.itemsize
+        for k, leaf in engine.cache.items() if k.endswith("_pages")
+    )
+
+
+def _paged_scenario(rows, cfg, model, params) -> None:
     from repro.serving.engine import ServeEngine
 
-    cfg = REDUCED[ARCH]
-    model = get_model(cfg)
-    params = model.init(jax.random.key(0))
     max_pages = -(-MAX_SEQ // PAGE_SIZE)
 
     print(f"serving bench: {ARCH} (reduced), prompts {sorted(set(PROMPT_LENS))}, "
@@ -183,8 +207,125 @@ def main(rows=None) -> list[dict]:
                 "match": match if kind == "paged" else "",
             })
         print(f"      paged/dense cache bytes per slot: {ratio:.2%}")
+
+
+def _prefix_workload(cfg, prefix_len, seed):
+    """PS_REQS prompts sharing one ``prefix_len``-token prefix, each with a
+    unique PS_SUFFIX-token tail."""
+    rng = np.random.default_rng(seed)
+    prefix = rng.integers(1, cfg.vocab_size, prefix_len).tolist()
+    return [prefix + rng.integers(1, cfg.vocab_size, PS_SUFFIX).tolist()
+            for _ in range(PS_REQS)]
+
+
+def _prefix_share_scenario(rows, cfg, model, params) -> None:
+    from repro.serving.engine import ServeEngine
+
+    max_pages = -(-MAX_SEQ // PAGE_SIZE)
+    print(f"\nprefix-share bench: {ARCH} (reduced), {PS_REQS} reqs x "
+          f"(shared prefix + {PS_SUFFIX} unique), {PS_SLOTS} slots, "
+          f"page {PAGE_SIZE}")
+    print(f"{'prefix':>6} {'engine':>12} {'tok/s':>8} {'prefill tok':>11} "
+          f"{'shared tok':>10} {'peakPg':>6} {'cacheB/slot':>12} {'match':>6}")
+
+    for prefix_len in PREFIX_LENS:
+        results = {}
+        for share in (False, True):
+            engine = ServeEngine(
+                model, params, n_slots=PS_SLOTS, max_seq=MAX_SEQ, paged=True,
+                page_size=PAGE_SIZE, prefill_chunk=PREFILL_CHUNK,
+                prefix_share=share,
+            )
+            # warmup covers every chunk offset (compile-free measured pass);
+            # seed differs, so the measured pass starts with a cold prefix
+            # cache and still pays the first full prefill
+            run_workload(engine, _prefix_workload(cfg, prefix_len, seed=11),
+                         timed=False)
+            engine.reset_stats()
+            reqs, tps, _ = run_workload(
+                engine, _prefix_workload(cfg, prefix_len, seed=12), timed=True
+            )
+            assert engine.pool.outstanding == 0, "refcount leak"
+            assert engine.pool.available == engine.n_pages - 1, \
+                "pool did not drain back to its initial free-page count"
+            results[share] = {
+                "reqs": sorted(reqs, key=lambda r: r.req_id),
+                "tok_s": tps,
+                "stats": dict(engine.stats),
+                "bytes_slot": (engine.stats["peak_pages"] * _page_bytes(engine)
+                               + engine.page_table.nbytes) / PS_SLOTS,
+            }
+
+        match = all(
+            a.generated == b.generated
+            for a, b in zip(results[False]["reqs"], results[True]["reqs"])
+        )
+        for share in (False, True):
+            r = results[share]
+            name = "paged+share" if share else "paged"
+            print(f"{prefix_len:>6} {name:>12} {r['tok_s']:>8.1f} "
+                  f"{r['stats']['prefill_tokens']:>11} "
+                  f"{r['stats']['prefill_tokens_shared']:>10} "
+                  f"{r['stats']['peak_pages']:>6} {r['bytes_slot']:>12.0f} "
+                  f"{str(match) if share else '':>6}")
+            rows.append({
+                "bench": "serving-prefix", "engine": name,
+                "prefix_len": prefix_len, "slots": PS_SLOTS,
+                "tokens_per_s": round(r["tok_s"], 2),
+                "prefill_tokens": r["stats"]["prefill_tokens"],
+                "prefill_tokens_shared": r["stats"]["prefill_tokens_shared"],
+                "cow_copies": r["stats"]["cow_copies"],
+                "peak_pages": r["stats"]["peak_pages"],
+                "cache_bytes_per_slot": int(r["bytes_slot"]),
+                "match": match if share else "",
+            })
+        base = results[False]["stats"]["prefill_tokens"]
+        got = results[True]["stats"]["prefill_tokens"]
+        print(f"       prefill tokens computed: {got}/{base} "
+              f"({1 - got / base:.1%} avoided)")
+
+
+def write_json(rows) -> None:
+    """Machine-readable BENCH_SERVING at the repo root (perf trajectory).
+
+    Rows merge by scenario: a standalone ``--prefix-share`` run replaces
+    only the ``serving-prefix`` rows and keeps the paged-vs-dense ones."""
+    old = []
+    if JSON_PATH.exists():
+        try:
+            old = json.loads(JSON_PATH.read_text()).get("rows", [])
+        except (json.JSONDecodeError, AttributeError):
+            old = []
+    fresh = {r.get("bench") for r in rows}
+    merged = [r for r in old if r.get("bench") not in fresh] + rows
+    payload = {"bench": "BENCH_SERVING", "arch": ARCH, "rows": merged}
+    JSON_PATH.write_text(json.dumps(payload, indent=1) + "\n")
+    print(f"\nwrote {len(merged)} rows to {JSON_PATH}")
+
+
+def main(rows=None, scenarios=("paged", "prefix-share")) -> list[dict]:
+    rows = rows if rows is not None else []
+    from repro.configs import REDUCED
+    from repro.models import get_model
+
+    cfg = REDUCED[ARCH]
+    model = get_model(cfg)
+    params = model.init(jax.random.key(0))
+    mark = len(rows)
+    if "paged" in scenarios:
+        _paged_scenario(rows, cfg, model, params)
+    if "prefix-share" in scenarios:
+        _prefix_share_scenario(rows, cfg, model, params)
+    write_json(rows[mark:])
     return rows
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--prefix-share", action="store_true",
+                    help="run only the prefix-sharing scenario")
+    args = ap.parse_args()
+    main(scenarios=("prefix-share",) if args.prefix_share
+         else ("paged", "prefix-share"))

@@ -446,4 +446,7 @@ def make_model(cfg: ModelConfig) -> ModelFns:
         paged_cache_specs=functools.partial(paged_cache_specs, cfg),
         prefill_chunk=functools.partial(prefill_chunk_fn, cfg=cfg),
         decode_paged=functools.partial(decode_paged_fn, cfg=cfg),
+        # attention K/V pages could be shared, but the Mamba2 recurrent
+        # state cannot be skipped — prefix sharing is bookkeeping only
+        paged_state=True,
     )

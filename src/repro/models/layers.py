@@ -152,8 +152,11 @@ def paged_kv_append(
 ) -> jax.Array:
     """Scatter one token per sequence into its page-table-mapped page.
 
-    Pages are exclusively owned by one sequence, so the (page, offset)
-    targets never collide across the batch. Inactive lanes must point their
+    Write-target pages are exclusively owned by one sequence, so the
+    (page, offset) targets never collide across the batch: decode writes
+    land at ``positions >= prompt_len``, which the engine always maps to
+    private pages — prefix-shared pages (refcount > 1) are read-only and
+    sit strictly below any write position. Inactive lanes must point their
     table rows at the reserved scratch page (id 0).
     """
     P = pages.shape[1]
@@ -197,7 +200,13 @@ def attn_prefill_chunk(
     slot's pages, then attend causally over the gathered context pages
     ``[0, offset + C)`` (earlier chunks + this one). ``offset`` is static, so
     the context gather is exactly as long as needed — admission cost is
-    O(prompt pages), not O(max_seq). Returns (out, k_pages, v_pages)."""
+    O(prompt pages), not O(max_seq).
+
+    The context gather reads through the page table, so pages below
+    ``offset`` may be *shared* prefix pages owned by other slots (prefix
+    sharing): they are only read here — writes target positions
+    ``>= offset``, which the engine maps to private (or COW-copied)
+    pages. Returns (out, k_pages, v_pages)."""
     C = x.shape[1]
     P = k_pages.shape[1]
     max_pages = page_table.shape[0]

@@ -259,4 +259,7 @@ def make_model(cfg: ModelConfig) -> ModelFns:
         paged_cache_specs=functools.partial(paged_cache_specs, cfg),
         prefill_chunk=functools.partial(prefill_chunk_fn, cfg=cfg),
         decode_paged=functools.partial(decode_fn, cfg=cfg),
+        # recurrent state is not page-addressable: prefix sharing falls
+        # back to trie bookkeeping only
+        paged_state=True,
     )

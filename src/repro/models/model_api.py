@@ -119,11 +119,16 @@ class ModelFns:
     #   page_table (max_pages,); returns (last-valid-token logits, cache);
     # - decode_paged(params, cache, batch) — one batched token step; batch
     #   carries tokens (B, 1), positions (B,), page_table (B, max_pages).
+    # - paged_state — True when the paged cache carries per-slot recurrent
+    #   state (SSM conv/ssm leaves) in addition to (or instead of) page
+    #   pools. Such state is not page-addressable, so the engine's
+    #   copy-on-write prefix sharing falls back to trie bookkeeping only.
     paged_cache_specs: Callable[..., Pytree] | None = None
     prefill_chunk: Callable[..., tuple[jax.Array, Pytree]] | None = None
     decode_paged: Callable[
         [Pytree, Pytree, dict], tuple[jax.Array, Pytree]
     ] | None = None
+    paged_state: bool = False
 
     def init(self, rng: jax.Array, dtype=jnp.float32) -> Pytree:
         return init_from_specs(self.param_specs, rng, dtype)
@@ -162,6 +167,13 @@ class ModelFns:
             and self.prefill_chunk is not None
             and self.decode_paged is not None
         )
+
+    @property
+    def supports_prefix_sharing(self) -> bool:
+        """True when the whole per-token cache lives in shared page pools,
+        so a cached prompt prefix can be installed into another slot's
+        page table with zero recompute (attention-only families)."""
+        return self.supports_paged and not self.paged_state
 
     def init_paged_cache(self, n_slots: int, n_pages: int, page_size: int,
                          dtype=jnp.bfloat16) -> Pytree:

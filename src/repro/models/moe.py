@@ -496,4 +496,6 @@ def make_model(cfg: ModelConfig) -> ModelFns:
         paged_cache_specs=functools.partial(paged_cache_specs, cfg),
         prefill_chunk=functools.partial(prefill_chunk_fn, cfg=cfg),
         decode_paged=functools.partial(decode_paged_fn, cfg=cfg),
+        # pure page-pool cache: eligible for copy-on-write prefix sharing
+        paged_state=False,
     )

@@ -257,6 +257,9 @@ def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
 def make_model(cfg: ModelConfig) -> ModelFns:
     # VLM prefill interleaves image embeddings — not chunkable yet, so the
     # paged serving path is only wired for the text-only dense families.
+    # Those families keep their whole per-token cache in page pools
+    # (paged_state=False), which makes them eligible for copy-on-write
+    # prefix sharing in the serving engine.
     paged = cfg.family != "vlm"
     return ModelFns(
         cfg=cfg,

@@ -9,16 +9,25 @@ allocated at admission and freed on completion, and prompts enter via
 scatter. Decode runs the paged flash-decode kernel
 (:mod:`repro.kernels.paged_decode_attention`).
 
-The engine's full state (params handle, page pool + tables or the legacy
-dense cache, slot bookkeeping, queued requests *including* modality
-extras) is snapshotable, so the ad hoc continuity protocol covers
-inference jobs exactly as it covers training jobs — and paged snapshots
-scale with the working set, not ``n_slots × max_seq``.
+**Prefix sharing**: the page pool refcounts pages and the engine keeps a
+:class:`~repro.serving.kvcache.PrefixIndex` trie from page-aligned token
+prefixes to resident page chains. Admission installs the longest cached
+prefix into the new slot's page table (copy-on-write: shared pages are
+read-only) and prefills only the uncached suffix — system-prompt-heavy
+traffic pays the shared prefix's FLOPs and cache bytes once, not once per
+slot.
+
+The engine's full state (params handle, page pool + refcounts + tables +
+prefix trie or the legacy dense cache, slot bookkeeping, queued requests
+*including* modality extras) is snapshotable, so the ad hoc continuity
+protocol covers inference jobs exactly as it covers training jobs — and
+paged snapshots scale with the working set, not ``n_slots × max_seq``.
 """
 
 from repro.serving.engine import Request, ServeEngine
 from repro.serving.kvcache import (
     PagePool,
+    PrefixIndex,
     cache_shardings,
     init_cache,
     init_paged_cache,
@@ -27,6 +36,6 @@ from repro.serving.kvcache import (
     scatter_slot,
 )
 
-__all__ = ["ServeEngine", "Request", "PagePool", "init_cache",
-           "init_paged_cache", "pages_needed", "scatter_slot",
+__all__ = ["ServeEngine", "Request", "PagePool", "PrefixIndex",
+           "init_cache", "init_paged_cache", "pages_needed", "scatter_slot",
            "cache_shardings", "paged_cache_shardings"]

@@ -14,6 +14,23 @@ completion; when the pool is exhausted, requests simply wait in the queue.
 Decode advances all active slots through one batched ``decode_paged`` step
 using the paged flash-decode kernel.
 
+**Prefix sharing (copy-on-write)**: the engine keeps a
+:class:`~repro.serving.kvcache.PrefixIndex` — a trie mapping page-aligned
+token prefixes to resident page chains. Admission looks up the longest
+cached prefix of each prompt, bumps the matched pages' refcounts, installs
+them into the slot's page table, and chunk-prefills only the uncached
+suffix: the page-table indirection in the paged decode/prefill kernels
+reads shared pages with no kernel change. Shared pages are read-only — if
+a slot must write into a partially-filled shared page (a whole-prompt hit
+whose final token is recomputed for first-token logits), it first copies
+the page (COW) and writes into its private copy. Admission is
+*prefix-aware*: under page pressure, a queued request whose prefix is
+cached (and therefore needs fewer private pages) may be admitted while the
+FIFO head waits for capacity. Families with recurrent state (SSM/hybrid)
+fall back gracefully: the trie tracks would-be hits for stats, but
+recurrent state is not page-addressable, so their prefill is never
+skipped.
+
 The legacy dense path (``paged=False``) keeps the original
 ``(n_slots, max_seq)`` cache with bucket-padded prefill — still used by
 families without paged support (enc-dec, VLM).
@@ -42,6 +59,7 @@ from repro.checkpoint.serializer import deserialize_tree, serialize_tree
 from repro.models.model_api import ModelFns
 from repro.serving.kvcache import (
     PagePool,
+    PrefixIndex,
     expand_prefill_cache,
     init_cache,
     init_paged_cache,
@@ -98,6 +116,17 @@ def _decode_extra(enc: dict) -> dict:
     return out
 
 
+def _copy_pages(cache: Pytree, src: jax.Array, dst: jax.Array) -> Pytree:
+    """COW: duplicate physical page ``src`` into ``dst`` in every paged
+    leaf (``*_pages``, laid out ``(layers, n_pages, page, ...)``). Rows of
+    ``dst`` past the copied prefix are dead — they are either overwritten
+    by the suffix prefill/decode before being read, or masked causally."""
+    return {
+        k: (v.at[:, dst].set(v[:, src]) if k.endswith("_pages") else v)
+        for k, v in cache.items()
+    }
+
+
 class ServeEngine:
     def __init__(
         self,
@@ -111,6 +140,7 @@ class ServeEngine:
         page_size: int = 64,
         n_pages: int | None = None,
         prefill_chunk: int = 256,
+        prefix_share: bool | None = None,
     ):
         self.model = model
         self.params = params
@@ -131,6 +161,14 @@ class ServeEngine:
         self.requests: dict[int, Request] = {}
         self._req_counter = 0
         self.steps = 0
+        self.stats = {
+            "prefill_tokens": 0,         # prompt tokens actually computed
+            "prefill_tokens_shared": 0,  # prompt tokens served from shared pages
+            "prefix_hit_tokens": 0,      # tokens covered by trie hits (incl. would-be)
+            "prefix_hits": 0,
+            "cow_copies": 0,
+            "peak_pages": 0,             # high-water mark of live pool pages
+        }
 
         if paged:
             self.page_size = page_size
@@ -146,12 +184,24 @@ class ServeEngine:
             self.slot_pages: list[list[int]] = [[] for _ in range(n_slots)]
             self.prefill_chunk = min(prefill_chunk,
                                      self.max_pages * page_size)
+            # prefix sharing: on by default; families with recurrent state
+            # (not page-addressable) keep trie bookkeeping only
+            enabled = True if prefix_share is None else prefix_share
+            self.prefix_cache = enabled
+            self.prefix_share = enabled and model.supports_prefix_sharing
+            self.prefix_index = PrefixIndex(page_size)
+            self._phantom_next = self.n_pages  # bookkeeping-only node ids
+            self._head_skips = 0  # fairness bound for prefix-aware admission
             self.cache = init_paged_cache(model, n_slots, self.n_pages,
                                           page_size, cache_dtype)
             self._decode_paged = jax.jit(model.decode_paged)
             self._prefill_chunk = jax.jit(
                 model.prefill_chunk, static_argnames=("offset",)
             )
+            # donate the cache: COW duplicates one page in place instead
+            # of materializing a second copy of every page pool
+            self._copy_pages = jax.jit(_copy_pages, donate_argnums=(0,))
+            self._admit_ready = True  # new submits / freed pages to try
         else:
             self.cache = init_cache(model, n_slots, max_seq, cache_dtype)
             self._prefill = jax.jit(model.prefill)
@@ -186,10 +236,17 @@ class ServeEngine:
         self._req_counter += 1
         self.requests[req.req_id] = req
         self.queue.append(req)
+        if self.paged:
+            self._admit_ready = True
         return req
 
     def pending(self) -> int:
         return len(self.queue) + sum(s is not None for s in self.slot_req)
+
+    def reset_stats(self) -> None:
+        """Zero the counters (e.g. between a warmup and a measured pass)."""
+        for k in self.stats:
+            self.stats[k] = 0
 
     def step(self) -> int:
         """Admit waiting requests, then advance every active slot by one
@@ -241,20 +298,74 @@ class ServeEngine:
     def _admit(self) -> None:
         free = [i for i, r in enumerate(self.slot_req) if r is None]
         while free and self.queue:
-            req = self.queue[0]
-            if self.paged:
-                need = pages_needed(
-                    min(len(req.prompt) + req.max_new_tokens, self.max_seq),
-                    self.page_size,
-                )
-                pages = self.pool.alloc(need)
-                if pages is None:
-                    return  # pool exhausted: wait for completions (FIFO)
-                self.queue.pop(0)
-                self._prefill_paged(free.pop(0), req, pages)
-            else:
-                self.queue.pop(0)
+            if not self.paged:
+                req = self.queue.pop(0)
                 self._prefill_into(free.pop(0), req)
+                continue
+            if not self._admit_ready:
+                return  # nothing changed since the last failed scan
+            # prefix-aware admission: FIFO order first. Under page
+            # pressure a later request may be admitted past the waiting
+            # head, but only if its cached prefix shrinks its private-page
+            # need, and only a bounded number of times per head — freed
+            # pages then accumulate for the head, so it cannot starve.
+            admitted = False
+            for qi, req in enumerate(self.queue):
+                if qi > 0 and self._head_skips >= 4 * self.n_slots:
+                    break
+                if self._try_admit_paged(free[0], req,
+                                         require_shared=qi > 0):
+                    self.queue.pop(qi)
+                    free.pop(0)
+                    self._head_skips = self._head_skips + 1 if qi else 0
+                    admitted = True
+                    break
+            if not admitted:
+                # don't rescan (O(queue) trie lookups) until a completion
+                # frees pages or a new request arrives
+                self._admit_ready = False
+                return
+
+    def _try_admit_paged(self, slot: int, req: Request, *,
+                         require_shared: bool = False) -> bool:
+        """Plan + execute one paged admission: trie lookup, refcount bumps
+        on the shared prefix pages, private allocation for the rest.
+        Returns False (no side effects) if the pool cannot satisfy it, or
+        if ``require_shared`` and no cached prefix shrinks the request."""
+        plen = len(req.prompt)
+        P = self.page_size
+        need = pages_needed(min(plen + req.max_new_tokens, self.max_seq), P)
+        matched, shared, would_be = 0, [], 0
+        if self.prefix_cache:
+            chain = self.prefix_index.lookup(req.prompt)
+            # cap at plen-1: at least one suffix token must run through
+            # the model to produce the first-token logits
+            matched = min(len(chain) * P, plen - 1)
+            if not self.prefix_share:
+                # recurrent state is not page-addressable: trie tracks
+                # would-be hits only, prefill is never skipped
+                would_be, matched = matched, 0
+            elif matched:
+                shared = chain[: pages_needed(matched, P)]
+        if require_shared and not shared:
+            return False
+        # feasibility pre-check so failure truly has no side effects:
+        # share() will pull revived (refcount-0) pages out of the free
+        # list, and alloc() needs the private pages on top of that
+        revive = sum(1 for p in shared if self.pool.refcount(p) == 0)
+        if (need - matched // P) + revive > self.pool.available:
+            return False
+        self.pool.share(shared)
+        private = self.pool.alloc(need - matched // P)
+        assert private is not None  # guaranteed by the pre-check
+        if self.prefix_cache:
+            # reallocated pages lose their cached contents
+            self.prefix_index.evict_pages(private)
+        if would_be:
+            self.stats["prefix_hits"] += 1
+            self.stats["prefix_hit_tokens"] += would_be
+        self._prefill_paged(slot, req, shared, private, matched)
+        return True
 
     def _release_slot(self, slot: int) -> None:
         self.slot_req[slot] = None
@@ -263,6 +374,7 @@ class ServeEngine:
             self.pool.free(self.slot_pages[slot])
             self.slot_pages[slot] = []
             self.page_table[slot, :] = 0  # scratch page: inert lane writes
+            self._admit_ready = True      # freed capacity: rescan the queue
 
     def _finish_admit(self, slot: int, req: Request, first: int,
                       length: int) -> None:
@@ -276,33 +388,107 @@ class ServeEngine:
             req.slot = None
             self._release_slot(slot)
 
-    def _prefill_paged(self, slot: int, req: Request,
-                       pages: list[int]) -> None:
-        """Chunked prefill at true prompt length: each chunk's K/V (or
-        recurrent state) is written straight into the slot's pages."""
+    def _prefill_paged(self, slot: int, req: Request, shared: list[int],
+                       private: list[int], matched: int) -> None:
+        """Chunked prefill of the uncached suffix at true prompt length:
+        each chunk's K/V (or recurrent state) is written straight into the
+        slot's private pages, while attention reads the shared prefix
+        pages through the page table.
+
+        ``shared`` holds the trie-matched prefix pages (refcounts already
+        bumped); ``matched`` is the token count they cover, page-aligned
+        except for a whole-prompt hit (capped at ``plen - 1``), where the
+        final, partially-used shared page is **copied on write**: the slot
+        gets a fresh page with the copied tail and recomputes only the
+        last prompt token into it for the first-token logits.
+
+        Suffix offsets are page multiples, so ``prefill_chunk`` compiles
+        at most ``max_pages`` offset variants (warmable, like the dense
+        engine's buckets); the whole-prompt COW recompute reuses the
+        already-compiled ``decode_paged`` instead of adding a
+        per-prompt-length prefill variant."""
         plen = len(req.prompt)
         assert plen >= 1 and plen < self.max_seq, plen
-        self.slot_pages[slot] = pages
-        self.page_table[slot, :] = 0
-        self.page_table[slot, : len(pages)] = pages
-        table_row = jnp.asarray(self.page_table[slot])
-        C = self.prefill_chunk
-        logits = None
-        for off in range(0, plen, C):
-            part = req.prompt[off:off + C]
-            toks = np.zeros((1, C), np.int32)
-            toks[0, : len(part)] = part
-            batch = {
-                "tokens": jnp.asarray(toks),
-                "valid": jnp.asarray(len(part), jnp.int32),
-                "slot": jnp.asarray(slot, jnp.int32),
-                "page_table": table_row,
-            }
-            logits, self.cache = self._prefill_chunk(
-                self.params, self.cache, batch, offset=off
+        P = self.page_size
+        full = matched // P
+        cow = bool(matched % P)
+        if cow:
+            # COW: private[0] replaces the partially-used shared page
+            src, dst = shared[full], private[0]
+            self.cache = self._copy_pages(
+                self.cache, jnp.asarray(src, jnp.int32),
+                jnp.asarray(dst, jnp.int32),
             )
-        first = int(np.asarray(jnp.argmax(logits, axis=-1))[0])
+            self.pool.free([src])  # drop this slot's read ref on the original
+            self.stats["cow_copies"] += 1
+        chain = shared[:full] + private
+        self.slot_pages[slot] = chain
+        self.page_table[slot, :] = 0
+        self.page_table[slot, : len(chain)] = chain
+        if cow:
+            # whole-prompt hit: only token plen-1 needs recomputing. One
+            # synthetic decode_paged step writes its K/V into the COW'd
+            # private page and returns the last-position logits. Other
+            # lanes re-write the K/V the next real step writes anyway
+            # (same token, same position — idempotent), and their logits
+            # are discarded; inactive lanes scatter into the scratch page.
+            toks = self.last_token.copy()
+            toks[slot] = req.prompt[-1]
+            pos = self.lengths.copy()
+            pos[slot] = plen - 1
+            batch = {
+                "tokens": jnp.asarray(toks)[:, None],
+                "positions": jnp.asarray(pos),
+                "page_table": jnp.asarray(self.page_table),
+            }
+            logits, self.cache = self._decode_paged(self.params, self.cache,
+                                                    batch)
+            first = int(np.asarray(jnp.argmax(logits[slot])))
+        else:
+            table_row = jnp.asarray(self.page_table[slot])
+            C = self.prefill_chunk
+            logits = None
+            for off in range(matched, plen, C):
+                part = req.prompt[off:off + C]
+                toks = np.zeros((1, C), np.int32)
+                toks[0, : len(part)] = part
+                batch = {
+                    "tokens": jnp.asarray(toks),
+                    "valid": jnp.asarray(len(part), jnp.int32),
+                    "slot": jnp.asarray(slot, jnp.int32),
+                    "page_table": table_row,
+                }
+                logits, self.cache = self._prefill_chunk(
+                    self.params, self.cache, batch, offset=off
+                )
+            first = int(np.asarray(jnp.argmax(logits, axis=-1))[0])
+        self.stats["prefill_tokens"] += plen - matched
+        self.stats["prefill_tokens_shared"] += matched
+        if matched:
+            self.stats["prefix_hits"] += 1
+            self.stats["prefix_hit_tokens"] += matched
+        self.stats["peak_pages"] = max(self.stats["peak_pages"],
+                                       self.pool.outstanding)
+        if self.prefix_cache:
+            self._register_prefix(req.prompt, chain)
         self._finish_admit(slot, req, first, plen)
+
+    def _register_prefix(self, prompt: list[int], chain: list[int]) -> None:
+        """Index the full prompt pages of a freshly admitted request so
+        later prompts can share them (or, for recurrent-state families,
+        so the trie can count would-be hits via phantom ids)."""
+        n = len(prompt) // self.page_size
+        if n == 0:
+            return
+        if self.prefix_share:
+            self.prefix_index.insert(prompt, chain[:n])
+            return
+        # bookkeeping-only trie: bound its growth, it holds no pages
+        if len(self.prefix_index) > 8 * self.n_pages:
+            return
+        phantoms = list(range(self._phantom_next, self._phantom_next + n))
+        self._phantom_next += n
+        self.prefix_index.insert(prompt, phantoms)
 
     def _prefill_into(self, slot: int, req: Request) -> None:
         plen = len(req.prompt)
@@ -360,12 +546,20 @@ class ServeEngine:
             },
         }
         if self.paged:
+            pool_free, pool_ref = self.pool.serialize()
             meta["page_size"] = self.page_size
             meta["n_pages"] = self.n_pages
-            meta["free_pages"] = [int(p) for p in self.pool._free]
+            meta["free_pages"] = pool_free
             meta["slot_pages"] = [
                 [int(p) for p in ps] for ps in self.slot_pages
             ]
+            # prefix sharing: refcounts + the trie must survive a restore
+            # on a substitute host, or shared pages would double-free
+            meta["page_ref"] = {str(p): r for p, r in pool_ref.items()}
+            meta["prefix_trie"] = (
+                self.prefix_index.serialize() if self.prefix_cache else []
+            )
+        meta["stats"] = {k: int(v) for k, v in self.stats.items()}
         mb = json.dumps(meta).encode()
         return len(mb).to_bytes(4, "little") + mb + blob
 
@@ -392,10 +586,26 @@ class ServeEngine:
         self.steps = int(state["steps"])
         if self.paged:
             self.page_table = np.asarray(state["page_table"]).copy()
-            self.pool.restore(meta["free_pages"])
+            # page_ref absent => legacy snapshot: every non-free page is
+            # exclusively owned (refcount 1), which restore() infers
+            self.pool.restore(meta["free_pages"], meta.get("page_ref"))
             self.slot_pages = [
                 [int(p) for p in ps] for ps in meta["slot_pages"]
             ]
+            if self.prefix_cache:
+                self.prefix_index = PrefixIndex.load(
+                    self.page_size, meta.get("prefix_trie", []),
+                    # sharing engines install trie ids into page tables,
+                    # so they must be real pool pages; bookkeeping-only
+                    # engines hold phantom ids >= n_pages
+                    max_page=self.n_pages if self.prefix_share else None,
+                )
+                phantoms = [p for p in self.prefix_index._nodes
+                            if p >= self.n_pages]
+                self._phantom_next = max(phantoms, default=self.n_pages - 1) + 1
+            self._admit_ready = True  # restored queue must be rescanned
+        self.stats = {**self.stats,
+                      **{k: int(v) for k, v in meta.get("stats", {}).items()}}
         self.requests = {}
         for rid, kv in meta["requests"].items():
             req = Request(

@@ -17,6 +17,14 @@ pages are handed out at admission (O(prompt pages), no full-cache copy)
 and returned when a request completes. O(1) recurrent state (SSM/conv)
 keeps its dense ``(n_slots, ...)`` layout.
 
+**Prefix sharing** (copy-on-write): :class:`PagePool` refcounts pages, and
+:class:`PrefixIndex` is a trie mapping page-aligned token prefixes to the
+live page chains that hold their K/V. At admission the engine installs the
+longest cached prefix's pages into the new slot's page table (refcount
+bump, zero prefill FLOPs for those tokens) and prefills only the uncached
+suffix. Shared pages are read-only — a slot that must write into a
+partially-filled shared page first copies it (fresh page + copied tail).
+
 Sharding: the partition rule engine maps ``kv_heads → model`` when the
 head count divides the axis, else falls back (``seq_fallback``/``pages``
 → model) — how 500k-token caches fit one host group.
@@ -91,20 +99,38 @@ def pages_needed(n_tokens: int, page_size: int) -> int:
 
 
 class PagePool:
-    """Host-side free-list allocator over ``n_pages`` physical pages.
+    """Host-side refcounting free-list allocator over ``n_pages`` pages.
 
     Page 0 (:data:`SCRATCH_PAGE`) is reserved: cleared page-table rows
     point at it so inactive decode lanes scatter into a sacrificial page
-    instead of a page another request now owns. Invariants (tested):
-    allocations are disjoint, ``available + outstanding == n_pages - 1``,
-    and a page is never handed out twice without being freed in between.
+    instead of a page another request now owns.
+
+    **Prefix sharing** extends the original exclusive-ownership allocator
+    with per-page refcounts: :meth:`share` bumps the count of pages that a
+    second slot installs into its page table (shared pages are read-only —
+    a slot that must write into one copies it first, see the engine's COW
+    path). :meth:`free` decrements and only returns a page to the free
+    list when its count reaches zero, so a page is never recycled while
+    any slot still reads it. A freed page keeps its contents: the prefix
+    index may still map a token prefix to it, and :meth:`share` *revives*
+    such a cached page straight out of the free list. Reallocation
+    (:meth:`alloc`) is what finally invalidates cached contents — the
+    caller must evict those pages from its prefix index.
+
+    Invariants (tested): live allocations are disjoint,
+    ``available + outstanding == n_pages - 1``, refcounts are positive for
+    exactly the outstanding pages, and a page is never handed out twice
+    without dropping to refcount zero in between.
     """
 
     def __init__(self, n_pages: int):
         assert n_pages >= 2, "need at least one allocatable page + scratch"
         self.n_pages = n_pages
+        # free-list order doubles as eviction order: alloc pops the head
+        # (oldest-freed / never-used first), free appends to the tail, so
+        # recently cached prefix pages survive the longest
         self._free = list(range(1, n_pages))
-        self._allocated: set[int] = set()
+        self._ref: dict[int, int] = {}
 
     @property
     def available(self) -> int:
@@ -112,28 +138,236 @@ class PagePool:
 
     @property
     def outstanding(self) -> int:
-        return len(self._allocated)
+        return len(self._ref)
+
+    def refcount(self, page: int) -> int:
+        return self._ref.get(page, 0)
 
     def alloc(self, n: int) -> list[int] | None:
-        """Pop ``n`` pages, or None (and no side effects) if exhausted."""
+        """Pop ``n`` pages, or None (and no side effects) if exhausted.
+
+        Handed-out pages lose any cached contents: callers holding a
+        prefix index must evict the returned ids from it.
+        """
         if n > len(self._free):
             return None
         pages, self._free = self._free[:n], self._free[n:]
-        self._allocated.update(pages)
+        for p in pages:
+            self._ref[p] = 1
         return pages
 
-    def free(self, pages: list[int]) -> None:
-        for p in pages:
-            assert p in self._allocated, f"double free of page {p}"
-            self._allocated.discard(p)
-        self._free.extend(pages)
+    def share(self, pages: list[int]) -> None:
+        """Bump the refcount of ``pages`` (install into another slot).
 
-    def restore(self, free: list[int]) -> None:
-        """Reset the allocator from a snapshot's free list."""
+        Pages at refcount zero are *revived*: pulled back out of the free
+        list with their contents intact (a prefix-cache hit on a page
+        whose last owner already completed).
+        """
+        revive = set()
+        for p in pages:
+            assert 0 < p < self.n_pages, f"share of invalid page {p}"
+            r = self._ref.get(p, 0)
+            if r == 0:
+                revive.add(p)
+            self._ref[p] = r + 1
+        if revive:
+            assert revive <= set(self._free), "revive of a live page"
+            self._free = [p for p in self._free if p not in revive]
+
+    def free(self, pages: list[int]) -> None:
+        """Drop one reference per page; recycle at refcount zero."""
+        for p in pages:
+            r = self._ref.get(p, 0)
+            assert r > 0, f"double free of page {p}"
+            if r == 1:
+                del self._ref[p]
+                self._free.append(p)
+            else:
+                self._ref[p] = r - 1
+
+    def serialize(self) -> tuple[list[int], dict[int, int]]:
+        """Snapshot counterpart of :meth:`restore`: the free list (in
+        eviction order) and the live refcounts."""
+        return list(self._free), dict(self._ref)
+
+    def restore(self, free: list[int],
+                ref: dict[int, int] | None = None) -> None:
+        """Reset the allocator from a snapshot's free list (+ refcounts).
+
+        The incoming lists are validated rather than trusted: a corrupt
+        snapshot (duplicate or out-of-range page ids, the scratch page in
+        the free list, refcounted pages overlapping the free list, or
+        pages missing from both) raises ``ValueError`` instead of
+        silently seeding an allocator that would later double-hand-out
+        pages.
+        """
         free = [int(p) for p in free]
-        assert SCRATCH_PAGE not in free
+        if len(set(free)) != len(free):
+            raise ValueError("corrupt snapshot: duplicate free page ids")
+        bad = [p for p in free if not 0 < p < self.n_pages]
+        if bad or SCRATCH_PAGE in free:
+            raise ValueError(
+                f"corrupt snapshot: free page ids out of range {bad or [0]}"
+            )
+        if ref is None:
+            # legacy snapshot: every non-free page is exclusively owned
+            ref = {p: 1 for p in range(1, self.n_pages) if p not in set(free)}
+        else:
+            ref = {int(p): int(r) for p, r in ref.items()}
+            if any(r < 1 for r in ref.values()):
+                raise ValueError("corrupt snapshot: non-positive refcount")
+            bad = [p for p in ref if not 0 < p < self.n_pages]
+            if bad:
+                raise ValueError(
+                    f"corrupt snapshot: refcounted page ids out of range {bad}"
+                )
+        if set(free) & set(ref):
+            raise ValueError(
+                "corrupt snapshot: pages both free and refcounted"
+            )
+        if set(free) | set(ref) != set(range(1, self.n_pages)):
+            raise ValueError(
+                "corrupt snapshot: pages missing from free list + refcounts"
+            )
         self._free = free
-        self._allocated = set(range(1, self.n_pages)) - set(free)
+        self._ref = ref
+
+
+class PrefixIndex:
+    """Trie over page-sized token blocks → resident page ids.
+
+    One node per *full* page of prompt tokens: the node for block ``i`` of
+    a prompt exists iff tokens ``[i*P, (i+1)*P)`` of some admitted request
+    have been prefilled into a page that is still resident (refcounted by
+    a slot, or sitting content-intact in the pool's free list). Nodes are
+    keyed by ``(parent node, block tokens)``, so lookups walk the trie at
+    page granularity and return the longest chain of reusable pages.
+
+    Families whose per-token cache is not page-addressable (SSM/hybrid
+    recurrent state) insert *phantom* ids (``>= n_pages``, handed out by
+    the engine) — the trie then only tracks would-be hits for stats; no
+    pages are installed and prefill is not skipped.
+
+    The index holds **no pool references**: a cached page whose owners all
+    completed lives in the free list until reallocation, at which point
+    the engine calls :meth:`evict_pages` and the node (plus its now
+    unreachable subtree) is dropped.
+    """
+
+    ROOT = None
+
+    def __init__(self, page_size: int):
+        self.page_size = page_size
+        # parent node id (None = root) -> {block token tuple: child id}
+        self._children: dict[int | None, dict[tuple[int, ...], int]] = {}
+        # node id -> (parent node id, block token tuple)
+        self._nodes: dict[int, tuple[int | None, tuple[int, ...]]] = {}
+
+    def __len__(self) -> int:
+        return len(self._nodes)
+
+    def lookup(self, tokens: list[int]) -> list[int]:
+        """Longest cached page-aligned prefix of ``tokens``: the matched
+        page-id chain, outermost page first."""
+        P = self.page_size
+        chain: list[int] = []
+        parent: int | None = self.ROOT
+        for i in range(len(tokens) // P):
+            page = self._children.get(parent, {}).get(
+                tuple(tokens[i * P:(i + 1) * P])
+            )
+            if page is None:
+                break
+            chain.append(page)
+            parent = page
+        return chain
+
+    def insert(self, tokens: list[int], chain: list[int]) -> None:
+        """Register the full prompt pages of an admitted request.
+
+        ``chain[i]`` is the page holding block ``i``. Existing entries
+        win — the first page prefilled for a block stays the canonical
+        copy, so COW duplicates never displace the shared original.
+        """
+        P = self.page_size
+        parent: int | None = self.ROOT
+        for i in range(min(len(tokens) // P, len(chain))):
+            block = tuple(tokens[i * P:(i + 1) * P])
+            kids = self._children.setdefault(parent, {})
+            page = kids.get(block)
+            if page is None:
+                page = chain[i]
+                kids[block] = page
+                self._nodes[page] = (parent, block)
+            parent = page
+
+    def evict_pages(self, pages: list[int]) -> None:
+        """Drop nodes whose pages were reallocated (plus their subtrees —
+        children are unreachable once the parent's content is gone)."""
+        for p in pages:
+            self._drop(p)
+
+    def _drop(self, page: int) -> None:
+        ent = self._nodes.pop(page, None)
+        if ent is None:
+            return
+        parent, block = ent
+        kids = self._children.get(parent)
+        if kids is not None and kids.get(block) == page:
+            del kids[block]
+            if not kids:
+                self._children.pop(parent, None)
+        for child in list(self._children.get(page, {}).values()):
+            self._drop(child)
+        self._children.pop(page, None)
+
+    # ------------------------------------------------------------ snapshot
+    def serialize(self) -> list[list]:
+        """JSON-friendly edge list, parents before children."""
+        out: list[list] = []
+        stack: list[int | None] = [self.ROOT]
+        while stack:
+            parent = stack.pop()
+            for block, page in self._children.get(parent, {}).items():
+                out.append([page, -2 if parent is self.ROOT else parent,
+                            list(block)])
+                stack.append(page)
+        return out
+
+    @classmethod
+    def load(cls, page_size: int, entries: list[list], *,
+             max_page: int | None = None) -> "PrefixIndex":
+        """Rebuild from :meth:`serialize` output, validating it: node ids
+        must be positive (never the scratch page) and — when ``max_page``
+        is given (sharing engines, where ids are installed into page
+        tables) — below the pool size; blocks must span exactly one page.
+        A corrupt snapshot raises ``ValueError`` instead of poisoning the
+        pool on the next prefix hit."""
+        idx = cls(page_size)
+        for page, parent, block in entries:
+            parent = cls.ROOT if parent == -2 else int(parent)
+            page = int(page)
+            if page < 1 or (max_page is not None and page >= max_page):
+                raise ValueError(
+                    f"corrupt snapshot: prefix-trie page id {page} out of "
+                    f"range"
+                )
+            if page in idx._nodes:
+                # a duplicate would leave a dangling edge after eviction,
+                # able to serve another request's live page as "cached"
+                raise ValueError(
+                    f"corrupt snapshot: prefix-trie page id {page} appears "
+                    f"twice"
+                )
+            if len(block) != page_size:
+                raise ValueError(
+                    f"corrupt snapshot: prefix-trie block of {len(block)} "
+                    f"tokens (page size {page_size})"
+                )
+            block = tuple(int(t) for t in block)
+            idx._children.setdefault(parent, {})[block] = page
+            idx._nodes[page] = (parent, block)
+        return idx
 
 
 def init_paged_cache(model: ModelFns, n_slots: int, n_pages: int,

@@ -1,0 +1,393 @@
+"""Copy-on-write prefix sharing: pool refcounts, the prefix trie, and the
+prefix-aware serving engine.
+
+- :class:`PagePool` share/free refcount invariants, revival of cached
+  pages out of the free list, validated snapshot restore;
+- :class:`PrefixIndex` longest-prefix lookup, first-wins insert, subtree
+  eviction, serialize/load round-trip;
+- engine parity: sharing is exact (token-for-token vs the non-shared
+  paged path), pages drain back to the initial free count (no refcount
+  leaks), COW triggers on whole-prompt hits, the prefix-aware scheduler
+  admits a cached-prefix request past a too-big FIFO head, and
+  recurrent-state families fall back to trie bookkeeping only;
+- snapshot/restore mid-flight with shared pages: refcounts and the trie
+  round-trip, and no page is double-freed on release.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import REDUCED
+from repro.models import get_model
+from repro.serving.engine import ServeEngine
+from repro.serving.kvcache import PagePool, PrefixIndex
+
+PAGE = 16
+
+
+# ---------------------------------------------------------------------------
+# PagePool refcounts
+# ---------------------------------------------------------------------------
+
+
+def test_pool_share_refcounts():
+    pool = PagePool(8)
+    a = pool.alloc(3)
+    pool.share(a[:2])
+    assert pool.refcount(a[0]) == 2 and pool.refcount(a[2]) == 1
+    assert pool.outstanding == 3
+    pool.free(a)                      # drop the alloc refs
+    assert pool.outstanding == 2      # shared pair still live
+    assert pool.available == 5
+    pool.free(a[:2])
+    assert pool.outstanding == 0 and pool.available == 7
+
+
+def test_pool_share_revives_cached_page():
+    pool = PagePool(8)
+    a = pool.alloc(2)
+    pool.free(a)                      # back in the free list, content intact
+    assert pool.available == 7
+    pool.share(a)                     # prefix hit on a completed request
+    assert pool.available == 5
+    assert all(pool.refcount(p) == 1 for p in a)
+    pool.free(a)
+    assert pool.available == 7 and pool.outstanding == 0
+
+
+def test_pool_overfree_rejected_through_sharing():
+    pool = PagePool(8)
+    a = pool.alloc(1)
+    pool.share(a)
+    pool.free(a)
+    pool.free(a)
+    with pytest.raises(AssertionError):
+        pool.free(a)
+
+
+@pytest.mark.parametrize("free,ref", [
+    ([1, 1, 2], None),                # duplicate free ids
+    ([0, 2], None),                   # scratch page in the free list
+    ([9], None),                      # out of range
+    ([1, 2], {"3": 0}),               # non-positive refcount
+    ([1, 2, 3], {"3": 1}),            # page both free and refcounted
+    ([1, 2], {"9": 1}),               # refcounted page out of range
+    ([1, 2], {"3": 1}),               # pages missing entirely (4..7)
+])
+def test_pool_restore_rejects_corrupt_snapshots(free, ref):
+    pool = PagePool(8)
+    with pytest.raises(ValueError):
+        pool.restore(free, ref)
+
+
+def test_pool_restore_with_refcounts():
+    pool = PagePool(8)
+    pool.restore([1, 2, 3], {"4": 1, "5": 2, "6": 1, "7": 3})
+    assert pool.available == 3 and pool.outstanding == 4
+    assert pool.refcount(5) == 2
+    pool.free([5])
+    assert pool.refcount(5) == 1
+
+
+def test_pool_restore_legacy_infers_exclusive_ownership():
+    pool = PagePool(8)
+    pool.restore([2, 4, 6])
+    assert pool.outstanding == 4
+    assert all(pool.refcount(p) == 1 for p in (1, 3, 5, 7))
+
+
+# ---------------------------------------------------------------------------
+# PrefixIndex
+# ---------------------------------------------------------------------------
+
+
+def _toks(*blocks):
+    out = []
+    for b in blocks:
+        out.extend([b] * 4)
+    return out
+
+
+def test_prefix_index_lookup_and_insert():
+    idx = PrefixIndex(4)
+    idx.insert(_toks(1, 2, 3), [10, 11, 12])
+    assert idx.lookup(_toks(1, 2, 3)) == [10, 11, 12]
+    assert idx.lookup(_toks(1, 2) + [3, 3, 3]) == [10, 11]  # partial page
+    assert idx.lookup(_toks(9, 2, 3)) == []
+    # divergent tail shares the common prefix nodes
+    idx.insert(_toks(1, 2, 7), [10, 11, 13])
+    assert idx.lookup(_toks(1, 2, 7)) == [10, 11, 13]
+    # first insert wins: a COW duplicate never displaces the original
+    idx.insert(_toks(1, 2, 3), [20, 21, 22])
+    assert idx.lookup(_toks(1, 2, 3)) == [10, 11, 12]
+
+
+def test_prefix_index_evict_drops_subtree():
+    idx = PrefixIndex(4)
+    idx.insert(_toks(1, 2, 3), [10, 11, 12])
+    idx.insert(_toks(1, 2, 7), [10, 11, 13])
+    idx.evict_pages([11])
+    assert idx.lookup(_toks(1, 2, 3)) == [10]
+    assert idx.lookup(_toks(1, 2, 7)) == [10]
+    # descendants of the evicted node are unreachable and dropped too
+    assert 12 not in idx._nodes and 13 not in idx._nodes
+    assert len(idx) == 1
+
+
+def test_prefix_index_serialize_round_trip():
+    idx = PrefixIndex(4)
+    idx.insert(_toks(1, 2, 3), [10, 11, 12])
+    idx.insert(_toks(1, 5), [10, 14])
+    clone = PrefixIndex.load(4, idx.serialize())
+    assert clone.lookup(_toks(1, 2, 3)) == [10, 11, 12]
+    assert clone.lookup(_toks(1, 5)) == [10, 14]
+    assert len(clone) == len(idx)
+
+
+# ---------------------------------------------------------------------------
+# Engine: sharing parity, COW, scheduler, snapshot
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def qwen():
+    cfg = REDUCED["qwen3-8b"]
+    model = get_model(cfg)
+    params = model.init(jax.random.key(0))
+    return cfg, model, params
+
+
+def _engine(model, params, **kw):
+    kw.setdefault("n_slots", 2)
+    kw.setdefault("max_seq", 96)
+    kw.setdefault("page_size", PAGE)
+    kw.setdefault("prefill_chunk", 32)
+    return ServeEngine(model, params, paged=True, **kw)
+
+
+def _shared_prompts(cfg, prefix_len, suffix_lens, seed=0):
+    rng = np.random.default_rng(seed)
+    prefix = rng.integers(1, cfg.vocab_size, prefix_len).tolist()
+    return [prefix + rng.integers(1, cfg.vocab_size, n).tolist()
+            for n in suffix_lens]
+
+
+def test_sharing_matches_non_shared_token_for_token(qwen):
+    cfg, model, params = qwen
+    prompts = _shared_prompts(cfg, 32, [8, 8, 8, 8], seed=1)
+    base = _engine(model, params, prefix_share=False)
+    shared = _engine(model, params, prefix_share=True)
+    for p in prompts:
+        base.submit(p, max_new_tokens=5)
+        shared.submit(p, max_new_tokens=5)
+    bd = sorted(base.run(300), key=lambda r: r.req_id)
+    sd = sorted(shared.run(300), key=lambda r: r.req_id)
+    assert [r.generated for r in sd] == [r.generated for r in bd]
+    assert shared.stats["prefill_tokens_shared"] > 0
+    assert base.stats["prefill_tokens_shared"] == 0
+    assert (shared.stats["prefill_tokens"]
+            < base.stats["prefill_tokens"])
+    # no refcount leaks: the pool drains back to its initial free count
+    assert shared.pool.outstanding == 0
+    assert shared.pool.available == shared.n_pages - 1
+    assert np.all(shared.page_table == 0)
+
+
+def test_sharing_survives_request_completion(qwen):
+    """The trie caches prefixes of *completed* requests: their pages stay
+    content-intact in the free list and are revived on the next hit."""
+    cfg, model, params = qwen
+    prompts = _shared_prompts(cfg, 32, [4, 6], seed=2)
+    eng = _engine(model, params, n_slots=1)   # strictly sequential slots
+    r1 = eng.submit(prompts[0], max_new_tokens=4)
+    eng.run(300)
+    assert eng.pool.outstanding == 0          # first request fully released
+    r2 = eng.submit(prompts[1], max_new_tokens=4)
+    eng.run(300)
+    assert eng.stats["prefill_tokens_shared"] == 32  # revived, not recomputed
+    base = _engine(model, params, n_slots=1, prefix_share=False)
+    q1 = base.submit(prompts[0], max_new_tokens=4)
+    base.run(300)
+    q2 = base.submit(prompts[1], max_new_tokens=4)
+    base.run(300)
+    assert r1.generated == q1.generated and r2.generated == q2.generated
+
+
+def test_whole_prompt_hit_triggers_cow(qwen):
+    """An identical prompt whose length is page-aligned matches every full
+    page; the final token is recomputed for first-token logits, which
+    copies the partially-reused shared page instead of writing into it."""
+    cfg, model, params = qwen
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(1, cfg.vocab_size, 2 * PAGE).tolist()
+    eng = _engine(model, params)
+    r1 = eng.submit(prompt, max_new_tokens=4)
+    r2 = eng.submit(prompt, max_new_tokens=4)
+    eng.run(300)
+    assert eng.stats["cow_copies"] == 1
+    assert r1.generated == r2.generated
+    base = _engine(model, params, prefix_share=False)
+    q = base.submit(prompt, max_new_tokens=4)
+    base.run(300)
+    assert r2.generated == q.generated
+    assert eng.pool.outstanding == 0
+    assert eng.pool.available == eng.n_pages - 1
+
+
+def test_prefix_aware_admission_skips_oversized_head(qwen):
+    """Under page pressure the scheduler admits a queued request whose
+    cached prefix shrinks its private-page need, while the FIFO head
+    waits — and the head still completes once capacity frees up."""
+    cfg, model, params = qwen
+    rng = np.random.default_rng(4)
+    prefix = rng.integers(1, cfg.vocab_size, 2 * PAGE).tolist()
+    a = prefix + rng.integers(1, cfg.vocab_size, 4).tolist()
+    big = rng.integers(1, cfg.vocab_size, 64).tolist()
+    c = prefix + rng.integers(1, cfg.vocab_size, 8).tolist()
+
+    eng = _engine(model, params, n_pages=8)   # 7 usable pages
+    ra = eng.submit(a, max_new_tokens=8)      # needs 3 pages
+    eng.step()                                # A admitted, 4 pages free
+    rb = eng.submit(big, max_new_tokens=16)   # needs 5 > 4: must wait
+    rc = eng.submit(c, max_new_tokens=8)      # needs 3, but shares 2
+    eng.step()
+    assert rc.slot is not None                # admitted past the head
+    assert rb.slot is None and rb in eng.queue
+    done = eng.run(500)
+    assert {r.req_id for r in done} == {ra.req_id, rb.req_id, rc.req_id}
+    # the skipped head's output is unaffected by having waited
+    ref = _engine(model, params, n_pages=8)
+    qb = ref.submit(big, max_new_tokens=16)
+    ref.run(300)
+    assert rb.generated == qb.generated
+    assert eng.pool.outstanding == 0
+    assert eng.pool.available == 7
+
+
+def test_admission_stays_fifo_without_a_cached_prefix(qwen):
+    """Skipping the head is reserved for cached-prefix requests: a later
+    request with no trie hit must wait behind an oversized head even when
+    it would fit, preserving PR 1's FIFO liveness guarantee."""
+    cfg, model, params = qwen
+    rng = np.random.default_rng(8)
+    a = rng.integers(1, cfg.vocab_size, 32).tolist()
+    big = rng.integers(1, cfg.vocab_size, 64).tolist()
+    small = rng.integers(1, cfg.vocab_size, 8).tolist()
+
+    eng = _engine(model, params, n_pages=8)   # 7 usable pages
+    eng.submit(a, max_new_tokens=8)           # 3 pages
+    eng.step()                                # admitted: 4 free
+    rb = eng.submit(big, max_new_tokens=16)   # needs 5 > 4: waits
+    rc = eng.submit(small, max_new_tokens=8)  # would fit, but no prefix hit
+    eng.step()
+    assert rc.slot is None and rb.slot is None   # both behind the head
+    done = eng.run(500)
+    assert len(done) == 3                        # and everyone completes
+    assert eng.pool.outstanding == 0
+
+
+def test_failed_admission_retries_do_not_inflate_stats():
+    """A queued request retried every step while the pool is full must
+    not bump the would-be-hit counters on each failed attempt."""
+    cfg = REDUCED["falcon-mamba-7b"]
+    model = get_model(cfg)
+    params = model.init(jax.random.key(0))
+    rng = np.random.default_rng(9)
+    prefix = rng.integers(1, cfg.vocab_size, 32).tolist()
+    p1 = prefix + rng.integers(1, cfg.vocab_size, 4).tolist()
+    p2 = prefix + rng.integers(1, cfg.vocab_size, 6).tolist()
+    eng = ServeEngine(model, params, n_slots=2, max_seq=64, paged=True,
+                      page_size=PAGE, prefill_chunk=16, n_pages=4)
+    eng.submit(p1, max_new_tokens=8)          # 3 pages: fills the pool
+    eng.submit(p2, max_new_tokens=8)          # hit, but must wait
+    for _ in range(4):                        # several failed retries
+        eng.step()
+    assert eng.stats["prefix_hits"] <= 1      # not one per retry
+    eng.run(300)
+    assert eng.stats["prefix_hits"] == 1
+    assert eng.stats["prefix_hit_tokens"] == 32
+    assert eng.pool.outstanding == 0
+
+
+def test_trie_load_rejects_corrupt_entries():
+    from repro.serving.kvcache import PrefixIndex as PI
+    with pytest.raises(ValueError):
+        PI.load(4, [[0, -2, [1, 2, 3, 4]]])            # scratch page id
+    with pytest.raises(ValueError):
+        PI.load(4, [[9, -2, [1, 2, 3, 4]]], max_page=8)  # beyond the pool
+    with pytest.raises(ValueError):
+        PI.load(4, [[3, -2, [1, 2]]])                  # short block
+    with pytest.raises(ValueError):                    # duplicate node id:
+        PI.load(4, [[3, -2, [1, 2, 3, 4]],             # would leave a
+                    [3, -2, [5, 6, 7, 8]]])            # dangling edge
+    idx = PI.load(4, [[9, -2, [1, 2, 3, 4]]])          # phantom id: fine
+    assert idx.lookup([1, 2, 3, 4]) == [9]
+
+
+def test_snapshot_restores_shared_refcounts_and_trie(qwen):
+    """Mid-generation snapshot with in-flight shared pages: refcounts and
+    the trie round-trip, continuations replay identically, and releasing
+    every request returns the pool to its initial free count without any
+    double-free."""
+    cfg, model, params = qwen
+    prompts = _shared_prompts(cfg, 32, [4, 6, 9, 5], seed=5)
+
+    ref_eng = _engine(model, params)
+    for p in prompts:
+        ref_eng.submit(p, max_new_tokens=8)
+    ref_done = sorted(ref_eng.run(400), key=lambda r: r.req_id)
+
+    eng = _engine(model, params)
+    for p in prompts:
+        eng.submit(p, max_new_tokens=8)
+    for _ in range(3):
+        eng.step()
+    assert any(r > 1 for r in eng.pool._ref.values())   # sharing in flight
+    ref_before = dict(eng.pool._ref)
+    blob = eng.snapshot()
+
+    eng2 = _engine(model, params)
+    eng2.restore(blob)
+    assert eng2.pool._ref == ref_before
+    assert len(eng2.prefix_index) == len(eng.prefix_index)
+    done2 = sorted(eng2.run(400), key=lambda r: r.req_id)
+    assert [r.generated for r in done2] == [r.generated for r in ref_done]
+    # releasing everything drains the pool exactly once per reference
+    assert eng2.pool.outstanding == 0
+    assert eng2.pool.available == eng2.n_pages - 1
+    assert np.all(eng2.page_table == 0)
+
+
+def test_sharing_disabled_restores_legacy_behavior(qwen):
+    cfg, model, params = qwen
+    prompts = _shared_prompts(cfg, 32, [4, 4], seed=6)
+    eng = _engine(model, params, prefix_share=False)
+    for p in prompts:
+        eng.submit(p, max_new_tokens=4)
+    eng.run(300)
+    assert eng.stats["prefix_hits"] == 0
+    assert len(eng.prefix_index) == 0
+    assert eng.pool.outstanding == 0
+
+
+def test_stateful_family_falls_back_to_bookkeeping():
+    """Recurrent state is not page-addressable: the trie counts would-be
+    hits, but prefill is never skipped and outputs stay deterministic."""
+    cfg = REDUCED["falcon-mamba-7b"]
+    model = get_model(cfg)
+    assert model.supports_paged and not model.supports_prefix_sharing
+    params = model.init(jax.random.key(0))
+    prompts = _shared_prompts(cfg, 32, [4, 6], seed=7)
+    outs = []
+    for _ in range(2):
+        eng = ServeEngine(model, params, n_slots=2, max_seq=64, paged=True,
+                          page_size=PAGE, prefill_chunk=16)
+        reqs = [eng.submit(p, max_new_tokens=4) for p in prompts]
+        eng.run(300)
+        outs.append([tuple(r.generated)
+                     for r in sorted(reqs, key=lambda r: r.req_id)])
+        assert eng.stats["prefill_tokens_shared"] == 0
+        assert eng.stats["prefix_hit_tokens"] >= 32
+        assert eng.pool.outstanding == 0
+    assert outs[0] == outs[1]
