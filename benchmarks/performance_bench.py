@@ -16,8 +16,6 @@ snapshot.
 
 from __future__ import annotations
 
-import numpy as np
-
 from repro.core.cloud import AdHocCloudSim, SimParams
 from repro.core.events import constant_failure_trace
 

@@ -11,16 +11,17 @@ Sections:
 - kernel       — kernel micro-benchmarks
 - roofline     — per-cell roofline terms from dry-run artifacts
 - serving      — paged vs dense serving engine + copy-on-write prefix
-                 sharing vs the non-shared paged path (BENCH_SERVING;
-                 also written machine-readably to BENCH_SERVING.json at
-                 the repo root so the perf trajectory is tracked across
-                 PRs — run `python -m benchmarks.serving_bench
-                 --prefix-share` for the sharing scenario alone)
+                 sharing vs the non-shared paged path + multi-host page
+                 spill under churn (BENCH_SERVING; also written
+                 machine-readably to BENCH_SERVING.json at the repo root
+                 so the perf trajectory is tracked across PRs — run
+                 `python -m benchmarks.serving_bench --prefix-share` or
+                 `--spill` for one scenario alone; REPRO_BENCH_TINY=1
+                 shrinks everything for the CI smoke job)
 """
 
 import argparse
 import csv
-import sys
 
 
 SECTIONS = ["reliability", "performance", "snapshot", "straggler",

@@ -26,15 +26,41 @@ sharing vs the non-shared paged path on a system-prompt-heavy workload
   they pin per slot (shared prefix pages are counted once, not per slot),
 - ``tok/s`` and token-for-token ``match`` against the non-shared engine.
 
+**spill** (``--spill`` standalone) — multi-host page spill under a churn
+trace. Several distinct prompt prefixes cycle through a pool too small to
+retain them all, with a cloudlet of neighbor hosts to lend cold pages to;
+one peer leaves (churn) between rounds. Three engines, identical
+workload:
+
+- ``paged``        — no spill tier, same small pool: realloc pressure
+  *evicts* retained prefixes (the recompute baseline),
+- ``paged+spill``  — same small pool + a ``RemotePagePool``: cold pages
+  are lent out and recalled on later hits,
+- ``paged-retain`` — no spill, pool sized to retain every prefix: the
+  local memory you would have to provision instead.
+
+Reported per engine: prefix-cache evictions, pages spilled/recalled,
+recall hit rate under churn, prompt tokens recomputed, and peak *locally
+resident* cache bytes per slot (live + free-but-cached pages — what the
+spill tier actually shrinks). Token parity across all three is asserted
+(the churn-safety invariant: recalls and misses never change tokens).
+
 Engines see each workload once as warmup (covering every bucket size /
-chunk offset) before the measured pass, so the numbers are compile-free.
-Results are also written machine-readably to ``BENCH_SERVING.json`` at the
-repo root so the perf trajectory is tracked across PRs.
+chunk offset) before the measured pass, so the numbers are compile-free
+(the spill scenario skips warmup and timing: its headline numbers are
+deterministic counters, not wall-clock). Results are also written
+machine-readably to ``BENCH_SERVING.json`` at the repo root so the perf
+trajectory is tracked across PRs.
+
+``REPRO_BENCH_TINY=1`` shrinks every scenario (fewer slots, shorter
+prompts, fewer repeats) for the CI smoke job, which asserts the JSON is
+emitted with every parity field true.
 """
 
 from __future__ import annotations
 
 import json
+import os
 import time
 from pathlib import Path
 
@@ -42,20 +68,31 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+TINY = bool(os.environ.get("REPRO_BENCH_TINY"))
+
 ARCH = "qwen3-8b"
 MAX_SEQ = 1024
 PAGE_SIZE = 64
 PREFILL_CHUNK = 256
-MAX_NEW = 16
-PROMPT_LENS = [32, 64, 128, 256, 512, 768, 32, 64]
+MAX_NEW = 8 if TINY else 16
+PROMPT_LENS = [32, 64, 128, 32] if TINY else [32, 64, 128, 256, 512, 768, 32, 64]
 POW2 = {32, 64, 128, 256, 512, 1024}
-SLOT_COUNTS = [2, 4, 8]
+SLOT_COUNTS = [2] if TINY else [2, 4, 8]
 
 # prefix-share scenario: N requests sharing a common prompt prefix
-PREFIX_LENS = [128, 256, 512]
+PREFIX_LENS = [128] if TINY else [128, 256, 512]
 PS_SUFFIX = 64
-PS_REQS = 8
-PS_SLOTS = 4
+PS_REQS = 4 if TINY else 8
+PS_SLOTS = 2 if TINY else 4
+
+# spill scenario: distinct prefixes cycling through an undersized pool
+SP_PREFIX_PAGES = 2 if TINY else 4   # prefix length in pages
+SP_SUFFIX = 16 if TINY else 32
+SP_PREFIXES = 3 if TINY else 4       # distinct system prompts
+SP_REQS_PER_PREFIX = 2
+SP_SLOTS = 2
+SP_ROUNDS = 2
+SP_PEER_CAP = 4                      # pages one peer will hold
 
 JSON_PATH = Path(__file__).resolve().parents[1] / "BENCH_SERVING.json"
 
@@ -285,6 +322,109 @@ def _prefix_share_scenario(rows, cfg, model, params) -> None:
               f"({1 - got / base:.1%} avoided)")
 
 
+def _spill_scenario(rows, cfg, model, params) -> None:
+    from repro.core.cloudlet import CloudletRegistry
+    from repro.core.reliability import ReliabilityRegistry
+    from repro.serving.engine import ServeEngine
+    from repro.serving.kvcache import RemotePagePool
+
+    P = PAGE_SIZE
+    prefix_len = SP_PREFIX_PAGES * P
+    rp = -(-(prefix_len + SP_SUFFIX + MAX_NEW) // P)   # pages per request
+    n_small = SP_SLOTS * rp + SP_PREFIX_PAGES + 2      # ~1 prefix retainable
+    n_retain = SP_SLOTS * rp + SP_PREFIXES * (SP_PREFIX_PAGES + 1) + 2
+
+    rng = np.random.default_rng(21)
+    prefixes = [rng.integers(1, cfg.vocab_size, prefix_len).tolist()
+                for _ in range(SP_PREFIXES)]
+
+    def suffixed(pref, seed):
+        r = np.random.default_rng(seed)
+        return [pref + r.integers(1, cfg.vocab_size, SP_SUFFIX).tolist()
+                for _ in range(SP_REQS_PER_PREFIX)]
+
+    # the serving cloudlet: the local host plus three lending peers; the
+    # first-choice peer churns away between rounds, taking its pages
+    reg = CloudletRegistry()
+    reg.create("serve", ARCH)
+    rel = ReliabilityRegistry()
+    for h in ("h0", "h1", "h2", "h3"):
+        reg.join("serve", h)
+        if h != "h0":
+            rel.add_host(h)
+    remote = RemotePagePool(reg, "serve", "h0", reliability=rel,
+                            peer_capacity_pages=SP_PEER_CAP)
+
+    def eng(n_pages, rp_pool=None):
+        return ServeEngine(model, params, n_slots=SP_SLOTS, max_seq=MAX_SEQ,
+                           paged=True, page_size=P,
+                           prefill_chunk=PREFILL_CHUNK, n_pages=n_pages,
+                           remote_pool=rp_pool)
+
+    engines = {
+        "paged": eng(n_small),
+        "paged+spill": eng(n_small, remote),
+        "paged-retain": eng(n_retain),
+    }
+
+    print(f"\nspill bench: {ARCH} (reduced), {SP_PREFIXES} prefixes x "
+          f"{SP_PREFIX_PAGES} pages, {SP_ROUNDS} rounds, {SP_SLOTS} slots, "
+          f"pool {n_small} (retain {n_retain}), churn after round 1")
+
+    outs = {k: [] for k in engines}
+    seed = 300
+    for rnd in range(SP_ROUNDS):
+        for pref in prefixes:
+            seed += 1
+            for name, e in engines.items():
+                reqs = [e.submit(p, max_new_tokens=MAX_NEW)
+                        for p in suffixed(pref, seed)]
+                e.run(4000)
+                outs[name].extend(tuple(r.generated) for r in reqs)
+        if rnd == 0:
+            reg.leave_all("h1")  # churn: peer leaves with the pages it held
+
+    match = all(o == outs["paged"] for o in outs.values())
+    recalled = remote.stats["pages_recalled"]
+    misses = remote.stats["recall_misses"]
+    hit_rate = recalled / (recalled + misses) if recalled + misses else 1.0
+
+    print(f"{'engine':>12} {'evict':>6} {'spill':>6} {'recall':>6} "
+          f"{'miss':>5} {'prefill tok':>11} {'residentPg':>10} "
+          f"{'cacheB/slot':>12} {'match':>6}")
+    for name, e in engines.items():
+        s = e.stats
+        bytes_slot = (s["peak_resident_pages"] * _page_bytes(e)
+                      + e.page_table.nbytes) / SP_SLOTS
+        print(f"{name:>12} {s['prefix_evictions']:>6} {s['pages_spilled']:>6} "
+              f"{s['pages_recalled']:>6} {s['recall_misses']:>5} "
+              f"{s['prefill_tokens']:>11} {s['peak_resident_pages']:>10} "
+              f"{bytes_slot:>12.0f} "
+              f"{str(match) if name == 'paged+spill' else '':>6}")
+        rows.append({
+            "bench": "serving-spill", "engine": name, "slots": SP_SLOTS,
+            "n_pages": e.n_pages,
+            "prefix_evictions": s["prefix_evictions"],
+            "pages_spilled": s["pages_spilled"],
+            "pages_recalled": s["pages_recalled"],
+            "recall_misses": s["recall_misses"],
+            "recall_hold_steps": s["recall_hold_steps"],
+            "prefill_tokens": s["prefill_tokens"],
+            "peak_resident_pages": s["peak_resident_pages"],
+            "cache_bytes_per_slot": int(bytes_slot),
+            "recall_hit_rate": round(hit_rate, 3) if name == "paged+spill"
+            else "",
+            "match": match if name == "paged+spill" else "",
+        })
+    base, spill = engines["paged"].stats, engines["paged+spill"].stats
+    retain = engines["paged-retain"].stats
+    print(f"       evictions avoided: "
+          f"{base['prefix_evictions'] - spill['prefix_evictions']}"
+          f"/{base['prefix_evictions']}, recall hit rate {hit_rate:.0%}, "
+          f"local peak pages {spill['peak_resident_pages']} vs "
+          f"{retain['peak_resident_pages']} retained locally")
+
+
 def write_json(rows) -> None:
     """Machine-readable BENCH_SERVING at the repo root (perf trajectory).
 
@@ -303,7 +443,8 @@ def write_json(rows) -> None:
     print(f"\nwrote {len(merged)} rows to {JSON_PATH}")
 
 
-def main(rows=None, scenarios=("paged", "prefix-share")) -> list[dict]:
+def main(rows=None,
+         scenarios=("paged", "prefix-share", "spill")) -> list[dict]:
     rows = rows if rows is not None else []
     from repro.configs import REDUCED
     from repro.models import get_model
@@ -316,6 +457,8 @@ def main(rows=None, scenarios=("paged", "prefix-share")) -> list[dict]:
         _paged_scenario(rows, cfg, model, params)
     if "prefix-share" in scenarios:
         _prefix_share_scenario(rows, cfg, model, params)
+    if "spill" in scenarios:
+        _spill_scenario(rows, cfg, model, params)
     write_json(rows[mark:])
     return rows
 
@@ -326,6 +469,12 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--prefix-share", action="store_true",
                     help="run only the prefix-sharing scenario")
+    ap.add_argument("--spill", action="store_true",
+                    help="run only the multi-host spill scenario")
     args = ap.parse_args()
-    main(scenarios=("prefix-share",) if args.prefix_share
-         else ("paged", "prefix-share"))
+    only = []
+    if args.prefix_share:
+        only.append("prefix-share")
+    if args.spill:
+        only.append("spill")
+    main(scenarios=tuple(only) or ("paged", "prefix-share", "spill"))

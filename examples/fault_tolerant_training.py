@@ -24,7 +24,7 @@ ref = AdHocTrainer(cfg, run, n_hosts=4, total_steps=STEPS,
 print(f"completed={ref.completed} loss {ref.losses[0][1]:.3f} -> "
       f"{ref.losses[-1][1]:.3f}")
 
-print(f"\n=== faulty run: host dies at step 8, another at step 17 ===")
+print("\n=== faulty run: host dies at step 8, another at step 17 ===")
 faulty = AdHocTrainer(
     cfg, run, n_hosts=4, total_steps=STEPS, seq_len=64, global_batch=8,
     fail_at_steps={8: "host000", 17: "host001"},

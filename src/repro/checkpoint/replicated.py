@@ -16,7 +16,7 @@ paper's keep-only-latest rule.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any
 
 from repro.checkpoint.serializer import join_shards, split_into_shards

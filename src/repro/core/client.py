@@ -22,7 +22,7 @@ bytes into peer :class:`~repro.checkpoint.store.SnapshotStore` objects
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Callable
 
 from repro.core.continuity import GuestRuntime

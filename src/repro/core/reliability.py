@@ -15,7 +15,7 @@ Service database table that stores it alongside each candidate host.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 
 def host_reliability(ca: int, cc: int, nf: int) -> float:

@@ -356,6 +356,13 @@ class AdHocServer:
     def _on_host_failure(self, host_id: str, now: float) -> None:
         self.reliability.record_host_failure(host_id)
         self.snapshots.drop_host(host_id)
+        # the failed host took any KV pages it was holding for neighbors
+        # with it: revoke its leases so lenders recall-miss and recompute
+        # instead of waiting on a dead peer (churn-safe spill, §III-B)
+        revoked = self.cloudlets.leases.invalidate_holder(host_id)
+        if revoked:
+            self._emit(now, "page_leases_revoked", host=host_id,
+                       leases=len(revoked))
         info = self.hosts.get(host_id)
         self._emit(now, "host_failed", host=host_id)
         if info and info.guest_id is not None:

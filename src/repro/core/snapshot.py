@@ -63,7 +63,16 @@ def select_receivers(
 
 @dataclass
 class SnapshotMeta:
-    """Server-side record of one stored snapshot version."""
+    """Server-side record of one stored snapshot version.
+
+    ``lease_ids`` lists the page leases (see
+    :class:`repro.core.cloudlet.LeaseTable`) the guest's serving cache
+    depended on when the snapshot was taken — pages spilled to neighbor
+    hosts. A restore on a substitute host revalidates those leases: ones
+    revoked by churn while the snapshot sat idle are recomputed, the rest
+    are recalled as usual, so the snapshot blob itself never has to embed
+    remote page payloads.
+    """
 
     guest_id: str
     version: int                  # monotonically increasing per guest
@@ -71,6 +80,7 @@ class SnapshotMeta:
     locations: list[str]          # receiver host ids currently holding it
     joint_failure: float          # ∏ p_fail at placement time
     created_at: float
+    lease_ids: list[int] = field(default_factory=list)
 
 
 @dataclass
@@ -139,11 +149,14 @@ class SnapshotScheduler:
         *,
         size_bytes: int,
         now: float,
+        lease_ids: list[int] | None = None,
     ) -> SnapshotMeta:
         """Register a new snapshot version; returns its metadata.
 
         Only the most recent snapshot is kept (the previous version's
         replicas are superseded — receivers overwrite on push).
+        ``lease_ids`` records the page leases the guest's cache depends on
+        at capture time (spilled KV pages on neighbor hosts).
         """
         prev = self.latest.get(guest_id)
         version = (prev.version + 1) if prev else 1
@@ -154,6 +167,7 @@ class SnapshotScheduler:
             locations=list(receivers),
             joint_failure=joint,
             created_at=now,
+            lease_ids=list(lease_ids or []),
         )
         self.latest[guest_id] = meta
         return meta
@@ -161,6 +175,12 @@ class SnapshotScheduler:
     def locations(self, guest_id: str) -> list[str]:
         meta = self.latest.get(guest_id)
         return list(meta.locations) if meta else []
+
+    def leases_of(self, guest_id: str) -> list[int]:
+        """Page leases the guest's latest snapshot depends on — the set a
+        restorer must revalidate before trusting spilled-page stubs."""
+        meta = self.latest.get(guest_id)
+        return list(meta.lease_ids) if meta else []
 
     def drop_host(self, host_id: str) -> None:
         """A host left/failed: its stored replicas are gone."""
@@ -190,7 +210,7 @@ class SnapshotScheduler:
             g: dict(
                 version=m.version, size_bytes=m.size_bytes,
                 locations=list(m.locations), joint_failure=m.joint_failure,
-                created_at=m.created_at,
+                created_at=m.created_at, lease_ids=list(m.lease_ids),
             )
             for g, m in self.latest.items()
         }

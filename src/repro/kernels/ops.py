@@ -12,14 +12,18 @@ The XLA implementations are *algorithmically identical* to the Pallas kernels
 (online-softmax flash blocks, chunked scans) so the roofline derived from the
 dry-run reflects the kernelized execution. ``ref.py`` holds the simple oracles
 both are tested against.
+
+The process-wide default backend comes from the ``REPRO_KERNEL_BACKEND``
+environment variable (``xla`` when unset) — how CI runs the whole test
+suite once per backend without touching test code; ``use_backend`` still
+overrides it per scope.
 """
 
 from __future__ import annotations
 
 import contextlib
 import contextvars
-import functools
-import math
+import os
 
 import jax
 import jax.numpy as jnp
@@ -27,8 +31,16 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.parallel import tracing
 
+_BACKENDS = ("xla", "pallas", "pallas_interpret")
+_DEFAULT_BACKEND = os.environ.get("REPRO_KERNEL_BACKEND", "xla")
+if _DEFAULT_BACKEND not in _BACKENDS:
+    raise ValueError(
+        f"REPRO_KERNEL_BACKEND={_DEFAULT_BACKEND!r}: expected one of "
+        f"{_BACKENDS}"
+    )
+
 _BACKEND: contextvars.ContextVar[str] = contextvars.ContextVar(
-    "repro_kernel_backend", default="xla"
+    "repro_kernel_backend", default=_DEFAULT_BACKEND
 )
 
 NEG_INF = -1e30
@@ -41,7 +53,7 @@ def current_backend() -> str:
 @contextlib.contextmanager
 def use_backend(name: str):
     """Context manager selecting the kernel backend ("xla", "pallas", "pallas_interpret")."""
-    assert name in ("xla", "pallas", "pallas_interpret"), name
+    assert name in _BACKENDS, name
     tok = _BACKEND.set(name)
     try:
         yield

@@ -13,14 +13,13 @@ is what lets 8B-class cells lower on a CPU container.
 
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
 from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
 
-from repro.config import ModelConfig, RunConfig, ShapeConfig, SHAPES
+from repro.config import ModelConfig, RunConfig, ShapeConfig
 from repro.models import get_model
 from repro.models.model_api import ModelFns, batch_axes_for
 from repro.parallel.partition import tree_shardings

@@ -15,7 +15,6 @@ expert_mlp, layers, state, conv, dt_rank, ssm_heads, batch, seq, null``.
 
 from __future__ import annotations
 
-import dataclasses
 import math
 from dataclasses import dataclass
 from typing import Any, Callable

@@ -21,7 +21,7 @@ import math
 import jax
 import jax.numpy as jnp
 
-from repro.config import ModelConfig, ShapeConfig
+from repro.config import ModelConfig
 from repro.kernels import ops
 from repro.models import layers as ll
 from repro.models.model_api import ModelFns, PSpec, standard_input_specs

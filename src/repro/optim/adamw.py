@@ -13,7 +13,8 @@ from repro.config import OptimConfig
 
 
 def adamw_init(params):
-    zeros = lambda p: jnp.zeros_like(p)
+    def zeros(p):
+        return jnp.zeros_like(p)
     return {
         "mu": jax.tree.map(zeros, params),
         "nu": jax.tree.map(zeros, params),

@@ -17,17 +17,40 @@ read-only) and prefills only the uncached suffix — system-prompt-heavy
 traffic pays the shared prefix's FLOPs and cache bytes once, not once per
 slot.
 
+**Multi-host page spill** — the ad hoc cloud's memory-harvesting tier.
+With a :class:`~repro.serving.kvcache.RemotePagePool` attached, page
+pressure that would evict retained prefix pages lends the coldest ones
+(pool LRU order) to neighbor cloudlet hosts instead, leaving
+:class:`~repro.serving.kvcache.SpilledPage` stubs in the trie.
+
+*Lease lifecycle*: ``lend`` grants a
+:class:`~repro.core.cloudlet.PageLease` in the cloudlet's
+:class:`~repro.core.cloudlet.LeaseTable`; the page either comes home via
+``recall`` on a prefix hit (fresh local page, stub remapped back, lease
+released, the slot *recall-held* for the simulated transfer), is
+``release``-d when its stub is evicted, or is *revoked* when the holder
+leaves the cloudlet (churn).
+
+*Churn-safety invariant*: a recall returns the exact bytes lent or
+misses; on a miss the stub's subtree is dropped and the prefix is
+recomputed. Borrowed memory can delay tokens, never change them —
+outputs are token-for-token identical with and without the spill tier.
+
 The engine's full state (params handle, page pool + refcounts + tables +
-prefix trie or the legacy dense cache, slot bookkeeping, queued requests
-*including* modality extras) is snapshotable, so the ad hoc continuity
-protocol covers inference jobs exactly as it covers training jobs — and
-paged snapshots scale with the working set, not ``n_slots × max_seq``.
+prefix trie + spill stubs/lease ids or the legacy dense cache, slot
+bookkeeping, queued requests *including* modality extras) is
+snapshotable, so the ad hoc continuity protocol covers inference jobs
+exactly as it covers training jobs — and paged snapshots scale with the
+working set, not ``n_slots × max_seq`` (lent pages stay on their peers;
+only their lease ids travel in the blob).
 """
 
 from repro.serving.engine import Request, ServeEngine
 from repro.serving.kvcache import (
     PagePool,
     PrefixIndex,
+    RemotePagePool,
+    SpilledPage,
     cache_shardings,
     init_cache,
     init_paged_cache,
@@ -37,5 +60,6 @@ from repro.serving.kvcache import (
 )
 
 __all__ = ["ServeEngine", "Request", "PagePool", "PrefixIndex",
+           "RemotePagePool", "SpilledPage",
            "init_cache", "init_paged_cache", "pages_needed", "scatter_slot",
            "cache_shardings", "paged_cache_shardings"]

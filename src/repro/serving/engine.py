@@ -31,6 +31,19 @@ fall back gracefully: the trie tracks would-be hits for stats, but
 recurrent state is not page-addressable, so their prefill is never
 skipped.
 
+**Multi-host page spill**: with a
+:class:`~repro.serving.kvcache.RemotePagePool` attached, reallocation
+pressure that would destroy retained prefix-cache pages instead *lends*
+the coldest ones (pool LRU order) to a neighbor cloudlet host, leaving
+spill stubs in the trie. Admission that hits a spilled prefix recalls the
+pages — batched, bounded by ``recall_budget`` per request — installs them
+into fresh local pages, and chunk-prefills only the remaining suffix; the
+scheduler then *recall-holds* the slot for the simulated transfer time
+(``slot_hold`` decode steps) so borrowed-memory latency is accounted
+without changing a single token. A peer's ``leave()`` (churn) revokes its
+leases: the recall misses, the stub's subtree is dropped, and the prefix
+is recomputed — never served stale.
+
 The legacy dense path (``paged=False``) keeps the original
 ``(n_slots, max_seq)`` cache with bucket-padded prefill — still used by
 families without paged support (enc-dec, VLM).
@@ -60,9 +73,13 @@ from repro.models.model_api import ModelFns
 from repro.serving.kvcache import (
     PagePool,
     PrefixIndex,
+    RemotePagePool,
+    SpilledPage,
     expand_prefill_cache,
+    extract_page_payload,
     init_cache,
     init_paged_cache,
+    page_payload_like,
     pages_needed,
     scatter_slot,
 )
@@ -127,6 +144,17 @@ def _copy_pages(cache: Pytree, src: jax.Array, dst: jax.Array) -> Pytree:
     }
 
 
+def _install_page(cache: Pytree, dst: jax.Array, vals: Pytree) -> Pytree:
+    """Recall: write a lent page's deserialized payload into physical page
+    ``dst`` of every paged leaf (the inverse of
+    :func:`~repro.serving.kvcache.extract_page_payload`)."""
+    return {
+        k: (v.at[:, dst].set(vals[k].astype(v.dtype)) if k.endswith("_pages")
+            else v)
+        for k, v in cache.items()
+    }
+
+
 class ServeEngine:
     def __init__(
         self,
@@ -141,6 +169,9 @@ class ServeEngine:
         n_pages: int | None = None,
         prefill_chunk: int = 256,
         prefix_share: bool | None = None,
+        remote_pool: RemotePagePool | None = None,
+        recall_budget: int = 8,
+        decode_step_s: float = 5e-3,
     ):
         self.model = model
         self.params = params
@@ -168,6 +199,15 @@ class ServeEngine:
             "prefix_hits": 0,
             "cow_copies": 0,
             "peak_pages": 0,             # high-water mark of live pool pages
+            # spill tier (all zero when no remote pool is attached)
+            "pages_spilled": 0,          # cold pages lent to a peer
+            "pages_recalled": 0,         # lent pages pulled back on a hit
+            "recall_misses": 0,          # recalls lost to peer churn
+            "prefix_evictions": 0,       # trie nodes whose content was lost
+            "recall_hold_steps": 0,      # decode steps slots spent recall-held
+            # high-water mark of pages whose content is resident locally
+            # (live + free-but-cached) — what spilling actually shrinks
+            "peak_resident_pages": 0,
         }
 
         if paged:
@@ -192,6 +232,16 @@ class ServeEngine:
             self.prefix_index = PrefixIndex(page_size)
             self._phantom_next = self.n_pages  # bookkeeping-only node ids
             self._head_skips = 0  # fairness bound for prefix-aware admission
+            # spill tier: lend cold cached pages to neighbor hosts instead
+            # of evicting them (only meaningful with page-addressable
+            # prefix sharing — recurrent state cannot be lent page-wise)
+            self.remote_pool = remote_pool
+            self.recall_budget = recall_budget
+            self.decode_step_s = decode_step_s
+            self.spill = remote_pool is not None and self.prefix_share
+            self.spilled: dict[int, SpilledPage] = {}
+            self._spill_next = self.n_pages  # stub ids, never page-table ids
+            self.slot_hold = np.zeros((n_slots,), np.int32)
             self.cache = init_paged_cache(model, n_slots, self.n_pages,
                                           page_size, cache_dtype)
             self._decode_paged = jax.jit(model.decode_paged)
@@ -201,8 +251,13 @@ class ServeEngine:
             # donate the cache: COW duplicates one page in place instead
             # of materializing a second copy of every page pool
             self._copy_pages = jax.jit(_copy_pages, donate_argnums=(0,))
+            self._install_page = jax.jit(_install_page, donate_argnums=(0,))
             self._admit_ready = True  # new submits / freed pages to try
         else:
+            if remote_pool is not None:
+                raise ValueError(
+                    "the spill tier needs the paged cache; use paged=True"
+                )
             self.cache = init_cache(model, n_slots, max_seq, cache_dtype)
             self._prefill = jax.jit(model.prefill)
             self._decode = jax.jit(model.decode_step)
@@ -250,9 +305,30 @@ class ServeEngine:
 
     def step(self) -> int:
         """Admit waiting requests, then advance every active slot by one
-        token. Returns the number of active slots that generated."""
+        token. Returns the number of active slots that generated.
+
+        Slots whose admission recalled spilled pages are **recall-held**
+        for the simulated transfer time (``slot_hold`` decode steps): the
+        scheduler keeps them admitted (their pages are pinned) but skips
+        their lanes until the hold drains, so borrowed-memory latency
+        costs wall-clock steps without ever changing tokens. A held lane
+        still rides through the batched kernel — its K/V write is
+        idempotent (same token, same position as its first real step) and
+        its logits are discarded.
+        """
         self._admit()
-        active = [i for i, r in enumerate(self.slot_req) if r is not None]
+        if self.paged:
+            held = self.slot_hold > 0
+            active = [i for i, r in enumerate(self.slot_req)
+                      if r is not None and not held[i]]
+            self.slot_hold[held] -= 1  # transfers progress as time passes
+            if not active:
+                if np.any(held):
+                    self.steps += 1  # recall wait: time passes, no tokens
+                return 0
+        else:
+            active = [i for i, r in enumerate(self.slot_req)
+                      if r is not None]
         if not active:
             return 0
         tokens = jnp.asarray(self.last_token)[:, None]
@@ -328,44 +404,182 @@ class ServeEngine:
 
     def _try_admit_paged(self, slot: int, req: Request, *,
                          require_shared: bool = False) -> bool:
-        """Plan + execute one paged admission: trie lookup, refcount bumps
-        on the shared prefix pages, private allocation for the rest.
-        Returns False (no side effects) if the pool cannot satisfy it, or
-        if ``require_shared`` and no cached prefix shrinks the request."""
+        """Plan + execute one paged admission: trie lookup, batched recall
+        of spilled prefix pages, refcount bumps on the shared prefix
+        pages, private allocation for the rest.
+
+        Returns False (no *local* side effects) if the pool cannot satisfy
+        it, or if ``require_shared`` and no resident cached prefix shrinks
+        the request. The plan loop re-plans after a recall miss (a peer
+        churned away mid-recall): the missed stub's subtree is dropped and
+        the prefix recomputed — churn degrades to recompute, never to
+        wrong tokens. Payloads already recalled by an attempt that then
+        fails are re-lent (or, failing that, evicted), so no cached page
+        is silently lost.
+        """
         plen = len(req.prompt)
         P = self.page_size
         need = pages_needed(min(plen + req.max_new_tokens, self.max_seq), P)
-        matched, shared, would_be = 0, [], 0
-        if self.prefix_cache:
-            chain = self.prefix_index.lookup(req.prompt)
-            # cap at plen-1: at least one suffix token must run through
-            # the model to produce the first-token logits
-            matched = min(len(chain) * P, plen - 1)
-            if not self.prefix_share:
-                # recurrent state is not page-addressable: trie tracks
-                # would-be hits only, prefill is never skipped
-                would_be, matched = matched, 0
-            elif matched:
-                shared = chain[: pages_needed(matched, P)]
-        if require_shared and not shared:
-            return False
-        # feasibility pre-check so failure truly has no side effects:
-        # share() will pull revived (refcount-0) pages out of the free
-        # list, and alloc() needs the private pages on top of that
-        revive = sum(1 for p in shared if self.pool.refcount(p) == 0)
-        if (need - matched // P) + revive > self.pool.available:
-            return False
-        self.pool.share(shared)
+        payloads: dict[int, bytes] = {}  # stub id -> recalled page bytes
+        wait_s = 0.0
+        allow_spill = self.spill
+        while True:
+            matched, shared, recalls, would_be = 0, [], [], 0
+            if self.prefix_cache:
+                chain = self.prefix_index.lookup(req.prompt)
+                # usable prefix: resident pages, plus spilled stubs within
+                # the per-request recall budget; truncated at the first
+                # stub the budget (or a disabled spill tier) cannot cover
+                usable: list[int] = []
+                budget = self.recall_budget - len(payloads)
+                for sid in chain:
+                    if sid < self.n_pages:
+                        usable.append(sid)
+                    elif (allow_spill and sid in self.spilled
+                          and (sid in payloads or budget > 0)):
+                        usable.append(sid)
+                        if sid not in payloads:
+                            budget -= 1
+                    else:
+                        break
+                # cap at plen-1: at least one suffix token must run
+                # through the model to produce the first-token logits
+                matched = min(len(usable) * P, plen - 1)
+                if not self.prefix_share:
+                    # recurrent state is not page-addressable: trie tracks
+                    # would-be hits only, prefill is never skipped
+                    would_be = min(len(chain) * P, plen - 1)
+                    matched = 0
+                elif matched:
+                    shared = usable[: pages_needed(matched, P)]
+                    recalls = [s for s in shared if s >= self.n_pages]
+            resident = [s for s in shared if s < self.n_pages]
+            if require_shared and not resident:
+                self._abort_recalls(payloads)
+                return False
+            # feasibility pre-check so failure has no local side effects:
+            # share() will pull revived (refcount-0) pages out of the free
+            # list, alloc() needs the private pages on top of that, and
+            # every recalled page needs a fresh local page too
+            revive = sum(1 for p in resident if self.pool.refcount(p) == 0)
+            if (need - matched // P) + len(recalls) + revive \
+                    > self.pool.available:
+                if recalls:
+                    # recalling won't fit: retry using only the resident
+                    # prefix (the stubs stay spilled for a later hit)
+                    allow_spill = False
+                    continue
+                self._abort_recalls(payloads)
+                return False
+            missing = [s for s in recalls if s not in payloads]
+            if missing:
+                got, w = self.remote_pool.recall(
+                    [self.spilled[s].lease_id for s in missing]
+                )
+                wait_s += w
+                missed = False
+                for s in missing:
+                    if s not in self.spilled:
+                        continue  # dropped as a missed ancestor's subtree
+                    blob = got.get(self.spilled[s].lease_id)
+                    if blob is None:
+                        # holder churned away: drop the stub's subtree and
+                        # fall back to recomputing those tokens
+                        self._evict_node(s)
+                        self.stats["recall_misses"] += 1
+                        missed = True
+                    else:
+                        payloads[s] = blob
+                if missed:
+                    continue  # re-plan against the pruned trie
+            break
+        # recalled payloads the final plan cannot use (a later re-plan
+        # shrank the usable prefix): re-lend them so they stay cached
+        unused = {s: payloads.pop(s) for s in list(payloads)
+                  if s not in recalls}
+        if unused:
+            self._abort_recalls(unused)
+        # ---- execute: guaranteed to succeed from here ----
+        self.pool.share(resident)  # revive cached pages before alloc
+        hold = (int(np.ceil(wait_s / self.decode_step_s))
+                if wait_s > 0 else 0)
+        if recalls:
+            local = self.pool.alloc(len(recalls))
+            assert local is not None  # guaranteed by the pre-check
+            self._retire_cached(local)
+            like = page_payload_like(self.cache)
+            for sid, page in zip(recalls, local):
+                vals = deserialize_tree(payloads.pop(sid), like)
+                self.cache = self._install_page(
+                    self.cache, jnp.asarray(page, jnp.int32),
+                    {k: jnp.asarray(v) for k, v in vals.items()},
+                )
+                self.prefix_index.remap(sid, page)
+                del self.spilled[sid]
+                shared[shared.index(sid)] = page
+            self.stats["pages_recalled"] += len(recalls)
         private = self.pool.alloc(need - matched // P)
         assert private is not None  # guaranteed by the pre-check
-        if self.prefix_cache:
-            # reallocated pages lose their cached contents
-            self.prefix_index.evict_pages(private)
+        self._retire_cached(private)
         if would_be:
             self.stats["prefix_hits"] += 1
             self.stats["prefix_hit_tokens"] += would_be
         self._prefill_paged(slot, req, shared, private, matched)
+        if hold and self.slot_req[slot] == req.req_id:
+            # recall-in-flight: scheduler holds this lane's decode for the
+            # simulated transfer time (see step())
+            self.slot_hold[slot] = hold
+            self.stats["recall_hold_steps"] += hold
         return True
+
+    def _retire_cached(self, pages: list[int]) -> None:
+        """Freshly reallocated pages lose their cached contents: **spill**
+        still-cached ones to a peer host (the pool's LRU alloc order makes
+        these the coldest retained prefixes) or, when no peer can take
+        them, evict them from the trie."""
+        if not self.prefix_cache:
+            return
+        for p in pages:
+            if p not in self.prefix_index._nodes:
+                continue
+            if self.spill:
+                lease = self.remote_pool.lend(
+                    extract_page_payload(self.cache, p)
+                )
+                if lease is not None:
+                    sid = self._spill_next
+                    self._spill_next += 1
+                    self.prefix_index.remap(p, sid)
+                    self.spilled[sid] = SpilledPage(lease.lease_id,
+                                                    lease.holder)
+                    self.stats["pages_spilled"] += 1
+                    continue
+            self._evict_node(p)
+
+    def _evict_node(self, node: int) -> None:
+        """Drop a trie node (content lost) plus its subtree, releasing the
+        leases of any spilled descendants — their pages become
+        unreachable, so holding peer capacity for them would leak."""
+        dropped = self.prefix_index.evict_pages([node])
+        for d in dropped:
+            sp = self.spilled.pop(d, None)
+            if sp is not None and self.remote_pool is not None:
+                self.remote_pool.release(sp.lease_id)
+        self.stats["prefix_evictions"] += len(dropped)
+
+    def _abort_recalls(self, payloads: dict[int, bytes]) -> None:
+        """An admission attempt consumed recalls it cannot use: re-lend
+        the payloads so the cached pages stay recallable (their leases
+        were released by the recall); evict the ones no peer will take."""
+        for sid, blob in list(payloads.items()):
+            if sid not in self.prefix_index._nodes:
+                continue  # stub already evicted (missed ancestor): discard
+            lease = self.remote_pool.lend(blob) if self.remote_pool else None
+            if lease is None:
+                self._evict_node(sid)
+            else:
+                self.spilled[sid] = SpilledPage(lease.lease_id, lease.holder)
+        payloads.clear()
 
     def _release_slot(self, slot: int) -> None:
         self.slot_req[slot] = None
@@ -374,6 +588,7 @@ class ServeEngine:
             self.pool.free(self.slot_pages[slot])
             self.slot_pages[slot] = []
             self.page_table[slot, :] = 0  # scratch page: inert lane writes
+            self.slot_hold[slot] = 0
             self._admit_ready = True      # freed capacity: rescan the queue
 
     def _finish_admit(self, slot: int, req: Request, first: int,
@@ -471,6 +686,16 @@ class ServeEngine:
                                        self.pool.outstanding)
         if self.prefix_cache:
             self._register_prefix(req.prompt, chain)
+        # locally resident content = live pages + free-but-cached prefix
+        # pages (what the spill tier moves to neighbor hosts)
+        retained = sum(
+            1 for p in self.prefix_index._nodes
+            if p < self.n_pages and self.pool.refcount(p) == 0
+        )
+        self.stats["peak_resident_pages"] = max(
+            self.stats["peak_resident_pages"],
+            self.pool.outstanding + retained,
+        )
         self._finish_admit(slot, req, first, plen)
 
     def _register_prefix(self, prompt: list[int], chain: list[int]) -> None:
@@ -546,7 +771,7 @@ class ServeEngine:
             },
         }
         if self.paged:
-            pool_free, pool_ref = self.pool.serialize()
+            pool_free, pool_ref, pool_touch = self.pool.serialize()
             meta["page_size"] = self.page_size
             meta["n_pages"] = self.n_pages
             meta["free_pages"] = pool_free
@@ -556,9 +781,18 @@ class ServeEngine:
             # prefix sharing: refcounts + the trie must survive a restore
             # on a substitute host, or shared pages would double-free
             meta["page_ref"] = {str(p): r for p, r in pool_ref.items()}
+            meta["page_touch"] = {str(p): g for p, g in pool_touch.items()}
             meta["prefix_trie"] = (
                 self.prefix_index.serialize() if self.prefix_cache else []
             )
+            # spill tier: only the stubs + lease ids travel in the blob —
+            # the lent payloads stay on their peers, and a restore
+            # revalidates each lease against live cloudlet membership
+            meta["spilled"] = {
+                str(sid): [sp.lease_id, sp.peer]
+                for sid, sp in self.spilled.items()
+            }
+            meta["slot_hold"] = [int(h) for h in self.slot_hold]
         meta["stats"] = {k: int(v) for k, v in self.stats.items()}
         mb = json.dumps(meta).encode()
         return len(mb).to_bytes(4, "little") + mb + blob
@@ -588,21 +822,59 @@ class ServeEngine:
             self.page_table = np.asarray(state["page_table"]).copy()
             # page_ref absent => legacy snapshot: every non-free page is
             # exclusively owned (refcount 1), which restore() infers
-            self.pool.restore(meta["free_pages"], meta.get("page_ref"))
+            self.pool.restore(meta["free_pages"], meta.get("page_ref"),
+                              meta.get("page_touch"))
             self.slot_pages = [
                 [int(p) for p in ps] for ps in meta["slot_pages"]
             ]
+            snap_spilled = {
+                int(sid): SpilledPage(int(ent[0]), ent[1])
+                for sid, ent in meta.get("spilled", {}).items()
+            }
+            self.slot_hold = np.asarray(
+                meta.get("slot_hold", [0] * self.n_slots), np.int32
+            ).copy()
             if self.prefix_cache:
                 self.prefix_index = PrefixIndex.load(
                     self.page_size, meta.get("prefix_trie", []),
                     # sharing engines install trie ids into page tables,
-                    # so they must be real pool pages; bookkeeping-only
-                    # engines hold phantom ids >= n_pages
+                    # so they must be real pool pages or known spill
+                    # stubs; bookkeeping-only engines hold phantom ids
+                    # >= n_pages
                     max_page=self.n_pages if self.prefix_share else None,
+                    extra_ids=set(snap_spilled),
                 )
                 phantoms = [p for p in self.prefix_index._nodes
                             if p >= self.n_pages]
                 self._phantom_next = max(phantoms, default=self.n_pages - 1) + 1
+                self._spill_next = max(
+                    snap_spilled, default=self.n_pages - 1
+                ) + 1
+                self._spill_next = max(self._spill_next, self.n_pages)
+                # revalidate leases: stubs whose lease was revoked while
+                # the snapshot sat idle (holder churned) — or that this
+                # engine cannot recall (no remote pool) — fall back to
+                # recompute; never to stale pages. All stubs are loaded
+                # *before* any eviction so that dropping an invalid
+                # ancestor releases the still-valid leases of its spilled
+                # descendants (via _evict_node) instead of leaking them.
+                self.spilled = {
+                    sid: sp for sid, sp in snap_spilled.items()
+                    if sid in self.prefix_index._nodes
+                }
+                if self.remote_pool is not None:
+                    for sid, sp in snap_spilled.items():
+                        if sid not in self.spilled:  # orphaned stub entry
+                            self.remote_pool.release(sp.lease_id)
+                for sid in list(self.spilled):
+                    sp = self.spilled.get(sid)
+                    if sp is None:
+                        continue  # dropped with an evicted ancestor
+                    if (self.remote_pool is None
+                            or not self.remote_pool.lease_valid(sp.lease_id)):
+                        if self.remote_pool is not None:
+                            self.remote_pool.release(sp.lease_id)
+                        self._evict_node(sid)
             self._admit_ready = True  # restored queue must be rescanned
         self.stats = {**self.stats,
                       **{k: int(v) for k, v in meta.get("stats", {}).items()}}

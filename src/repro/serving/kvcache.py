@@ -25,6 +25,27 @@ bump, zero prefill FLOPs for those tokens) and prefills only the uncached
 suffix. Shared pages are read-only — a slot that must write into a
 partially-filled shared page first copies it (fresh page + copied tail).
 
+**Multi-host page spill** (:class:`RemotePagePool`): when reallocation
+pressure would destroy retained prefix-cache pages, the coldest ones
+(LRU by :class:`PagePool` last-touch generation, necessarily refcount
+zero) are serialized and *lent* to a neighbor cloudlet host instead of
+evicted; a :class:`SpilledPage` stub keeps their place in the trie.
+
+Lease lifecycle: ``lend`` grants a
+:class:`~repro.core.cloudlet.PageLease` in the cloudlet's
+:class:`~repro.core.cloudlet.LeaseTable` (page lives on the peer) →
+either ``recall`` on a prefix hit (page reallocated locally, stub
+remapped back to a physical id, lease released) or ``release`` when the
+stub's trie node is evicted — or *revocation* when the holder leaves the
+cloudlet. Engine snapshots carry only the stubs + lease ids, never the
+remote payloads, so continuity blobs stay small and a restore
+revalidates each lease against live membership.
+
+Churn-safety invariant: a recall either returns the exact bytes that
+were lent or misses (holder churned), in which case the stub's subtree
+is dropped and the prefix recomputed — borrowed memory can *delay*
+tokens (recall wait) but never change them.
+
 Sharding: the partition rule engine maps ``kv_heads → model`` when the
 head count divides the axis, else falls back (``seq_fallback``/``pages``
 → model) — how 500k-token caches fit one host group.
@@ -32,11 +53,16 @@ head count divides the axis, else falls back (``seq_fallback``/``pages``
 
 from __future__ import annotations
 
+from dataclasses import dataclass
 from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.checkpoint.serializer import serialize_tree
+from repro.core.cloudlet import CloudletRegistry, PageLease
+from repro.core.reliability import ReliabilityRegistry
 from repro.models.model_api import ModelFns
 from repro.parallel.partition import tree_shardings
 
@@ -117,6 +143,14 @@ class PagePool:
     (:meth:`alloc`) is what finally invalidates cached contents — the
     caller must evict those pages from its prefix index.
 
+    **LRU generations** (the spill tier's eviction order): every page
+    carries a *last-touch generation*, bumped whenever the page is
+    allocated, shared/revived, freed, or explicitly :meth:`touch`-ed on a
+    prefix-cache read. :meth:`alloc` hands out the *coldest* free pages
+    first (never-touched, then oldest generation), so the pages a
+    reallocation retires — the candidates the engine spills to a neighbor
+    host — are exactly the least-recently-used cached prefixes.
+
     Invariants (tested): live allocations are disjoint,
     ``available + outstanding == n_pages - 1``, refcounts are positive for
     exactly the outstanding pages, and a page is never handed out twice
@@ -126,11 +160,11 @@ class PagePool:
     def __init__(self, n_pages: int):
         assert n_pages >= 2, "need at least one allocatable page + scratch"
         self.n_pages = n_pages
-        # free-list order doubles as eviction order: alloc pops the head
-        # (oldest-freed / never-used first), free appends to the tail, so
-        # recently cached prefix pages survive the longest
         self._free = list(range(1, n_pages))
         self._ref: dict[int, int] = {}
+        # last-touch generation per page (absent = never touched = coldest)
+        self._gen = 0
+        self._touch: dict[int, int] = {}
 
     @property
     def available(self) -> int:
@@ -143,17 +177,35 @@ class PagePool:
     def refcount(self, page: int) -> int:
         return self._ref.get(page, 0)
 
+    def last_touch(self, page: int) -> int:
+        return self._touch.get(page, 0)
+
+    def touch(self, pages: list[int]) -> None:
+        """Mark ``pages`` as just-used (a prefix-cache read of retained
+        pages): they move to the warm end of the eviction order."""
+        for p in pages:
+            self._gen += 1
+            self._touch[p] = self._gen
+
+    def _evict_order(self) -> list[int]:
+        """Free pages, coldest first (LRU by last-touch generation)."""
+        return sorted(self._free, key=lambda p: (self._touch.get(p, 0), p))
+
     def alloc(self, n: int) -> list[int] | None:
-        """Pop ``n`` pages, or None (and no side effects) if exhausted.
+        """Pop the ``n`` coldest free pages, or None (and no side effects)
+        if exhausted.
 
         Handed-out pages lose any cached contents: callers holding a
-        prefix index must evict the returned ids from it.
+        prefix index must evict (or spill) the returned ids.
         """
         if n > len(self._free):
             return None
-        pages, self._free = self._free[:n], self._free[n:]
+        pages = self._evict_order()[:n]
+        taken = set(pages)
+        self._free = [p for p in self._free if p not in taken]
         for p in pages:
             self._ref[p] = 1
+        self.touch(pages)
         return pages
 
     def share(self, pages: list[int]) -> None:
@@ -173,6 +225,7 @@ class PagePool:
         if revive:
             assert revive <= set(self._free), "revive of a live page"
             self._free = [p for p in self._free if p not in revive]
+        self.touch(pages)
 
     def free(self, pages: list[int]) -> None:
         """Drop one reference per page; recycle at refcount zero."""
@@ -184,14 +237,17 @@ class PagePool:
                 self._free.append(p)
             else:
                 self._ref[p] = r - 1
+        self.touch(pages)
 
-    def serialize(self) -> tuple[list[int], dict[int, int]]:
+    def serialize(self) -> tuple[list[int], dict[int, int], dict[int, int]]:
         """Snapshot counterpart of :meth:`restore`: the free list (in
-        eviction order) and the live refcounts."""
-        return list(self._free), dict(self._ref)
+        eviction order), the live refcounts, and the last-touch
+        generations."""
+        return self._evict_order(), dict(self._ref), dict(self._touch)
 
     def restore(self, free: list[int],
-                ref: dict[int, int] | None = None) -> None:
+                ref: dict[int, int] | None = None,
+                touch: dict[int, int] | None = None) -> None:
         """Reset the allocator from a snapshot's free list (+ refcounts).
 
         The incoming lists are validated rather than trusted: a corrupt
@@ -231,6 +287,17 @@ class PagePool:
             )
         self._free = free
         self._ref = ref
+        # generations are an eviction-order hint: filter rather than
+        # reject, and re-seed from the free-list order when absent so a
+        # legacy snapshot keeps its (approximate) LRU order
+        if touch is None:
+            self._touch = {p: i + 1 for i, p in enumerate(free)}
+        else:
+            self._touch = {
+                int(p): int(g) for p, g in touch.items()
+                if 0 < int(p) < self.n_pages
+            }
+        self._gen = max(self._touch.values(), default=0)
 
 
 class PrefixIndex:
@@ -301,16 +368,41 @@ class PrefixIndex:
                 self._nodes[page] = (parent, block)
             parent = page
 
-    def evict_pages(self, pages: list[int]) -> None:
-        """Drop nodes whose pages were reallocated (plus their subtrees —
-        children are unreachable once the parent's content is gone)."""
-        for p in pages:
-            self._drop(p)
+    def remap(self, old: int, new: int) -> None:
+        """Rename node ``old`` to ``new``, keeping its place in the trie
+        (parent edge and entire subtree intact).
 
-    def _drop(self, page: int) -> None:
+        This is how a page **spills** without losing its cached prefix:
+        the physical page id is swapped for a spill-stub id (and swapped
+        back on recall), while descendants — resident or spilled — stay
+        reachable through it.
+        """
+        assert new not in self._nodes, (old, new)
+        parent, block = self._nodes.pop(old)
+        self._nodes[new] = (parent, block)
+        self._children[parent][block] = new
+        kids = self._children.pop(old, None)
+        if kids is not None:
+            self._children[new] = kids
+            for blk, child in kids.items():
+                self._nodes[child] = (new, blk)
+
+    def evict_pages(self, pages: list[int]) -> list[int]:
+        """Drop nodes whose pages were reallocated (plus their subtrees —
+        children are unreachable once the parent's content is gone).
+        Returns every node id actually dropped, so the caller can release
+        spill leases belonging to dropped descendants."""
+        dropped: list[int] = []
+        for p in pages:
+            self._drop(p, dropped)
+        return dropped
+
+    def _drop(self, page: int, dropped: list[int] | None = None) -> None:
         ent = self._nodes.pop(page, None)
         if ent is None:
             return
+        if dropped is not None:
+            dropped.append(page)
         parent, block = ent
         kids = self._children.get(parent)
         if kids is not None and kids.get(block) == page:
@@ -318,7 +410,7 @@ class PrefixIndex:
             if not kids:
                 self._children.pop(parent, None)
         for child in list(self._children.get(page, {}).values()):
-            self._drop(child)
+            self._drop(child, dropped)
         self._children.pop(page, None)
 
     # ------------------------------------------------------------ snapshot
@@ -336,18 +428,23 @@ class PrefixIndex:
 
     @classmethod
     def load(cls, page_size: int, entries: list[list], *,
-             max_page: int | None = None) -> "PrefixIndex":
+             max_page: int | None = None,
+             extra_ids: frozenset[int] | set[int] = frozenset(),
+             ) -> "PrefixIndex":
         """Rebuild from :meth:`serialize` output, validating it: node ids
         must be positive (never the scratch page) and — when ``max_page``
         is given (sharing engines, where ids are installed into page
-        tables) — below the pool size; blocks must span exactly one page.
-        A corrupt snapshot raises ``ValueError`` instead of poisoning the
-        pool on the next prefix hit."""
+        tables) — below the pool size or in ``extra_ids`` (spill stubs,
+        which are resolved to real pages by recall before any page-table
+        install); blocks must span exactly one page. A corrupt snapshot
+        raises ``ValueError`` instead of poisoning the pool on the next
+        prefix hit."""
         idx = cls(page_size)
         for page, parent, block in entries:
             parent = cls.ROOT if parent == -2 else int(parent)
             page = int(page)
-            if page < 1 or (max_page is not None and page >= max_page):
+            if page < 1 or (max_page is not None and page >= max_page
+                            and page not in extra_ids):
                 raise ValueError(
                     f"corrupt snapshot: prefix-trie page id {page} out of "
                     f"range"
@@ -368,6 +465,204 @@ class PrefixIndex:
             idx._children.setdefault(parent, {})[block] = page
             idx._nodes[page] = (parent, block)
         return idx
+
+
+# ---------------------------------------------------------------------------
+# Multi-host page spill (the ad hoc cloud's memory-harvesting tier)
+# ---------------------------------------------------------------------------
+
+# simulated transfer costs (seconds). Lending is off the critical path
+# (write-behind); recall is paid before the suffix prefill of a request
+# that hits a spilled prefix, batched as one round trip per peer.
+LEND_PAGE_S = 2e-4
+RECALL_RTT_S = 1e-3
+RECALL_PAGE_S = 5e-4
+
+
+@dataclass
+class SpilledPage:
+    """Trie stub standing in for a page lent to a neighbor host.
+
+    The stub's node id (>= ``n_pages``, never installable in a page
+    table) stays in the :class:`PrefixIndex` where the physical page used
+    to be; ``lease_id`` names the loan in the cloudlet's
+    :class:`~repro.core.cloudlet.LeaseTable` and ``peer`` the host
+    physically holding the serialized page.
+    """
+
+    lease_id: int
+    peer: str
+
+
+def extract_page_payload(cache: Pytree, page: int) -> bytes:
+    """Serialize physical page ``page``'s slice of every paged cache leaf
+    (``*_pages``, laid out ``(layers, n_pages, page_size, ...)``) into a
+    self-describing blob — the unit a host lends to a peer."""
+    return serialize_tree({
+        k: np.asarray(v[:, page])
+        for k, v in cache.items() if k.endswith("_pages")
+    })
+
+
+def page_payload_like(cache: Pytree) -> dict[str, np.ndarray]:
+    """Zero templates matching :func:`extract_page_payload` output —
+    the ``like`` tree a recall deserializes against."""
+    return {
+        k: np.zeros((v.shape[0],) + tuple(v.shape[2:]), np.dtype(v.dtype))
+        for k, v in cache.items() if k.endswith("_pages")
+    }
+
+
+class RemotePagePool:
+    """Spill tier: lend cold KV pages to neighbor cloudlet hosts.
+
+    The paper's core move is harvesting *sporadically available,
+    non-exclusive* neighbor resources; this class applies it to serving
+    memory. When local page pressure would destroy retained prefix-cache
+    pages, the engine serializes them and **lends** them to a peer chosen
+    from ``registry.peers(cloudlet, host_id)`` — most reliable first, per
+    the §III-B reliability table — leaving a :class:`SpilledPage` stub in
+    the prefix trie. A later prompt that hits the spilled prefix
+    **recalls** the pages (batched, one simulated round trip per peer)
+    before chunked prefill of the suffix.
+
+    Borrowed memory is revocable: a peer's ``leave()`` invalidates every
+    lease it held (see :class:`~repro.core.cloudlet.LeaseTable`), so a
+    recall *misses* — the engine drops the stub's subtree and recomputes.
+    The churn-safety invariant: a recall either returns the exact bytes
+    that were lent, or nothing; stale data is unrepresentable because
+    lease validity is checked against live cloudlet membership at recall
+    time.
+
+    Simulated latency is accounted against §III-B reliability: expected
+    transfer time is scaled by ``1 / (1 - failure_probability(peer))`` —
+    the geometric-retry expectation over the peer's availability trace —
+    so flaky peers cost more wall-clock even when they eventually answer.
+    The engine converts the returned wait into recall-in-flight decode
+    steps (the scheduler keeps the slot admitted but holds its decode).
+    """
+
+    def __init__(
+        self,
+        registry: CloudletRegistry,
+        cloudlet: str,
+        host_id: str,
+        *,
+        reliability: ReliabilityRegistry | None = None,
+        peer_capacity_pages: int = 64,
+        lend_page_s: float = LEND_PAGE_S,
+        recall_rtt_s: float = RECALL_RTT_S,
+        recall_page_s: float = RECALL_PAGE_S,
+    ):
+        self.registry = registry
+        self.cloudlet = cloudlet
+        self.host_id = host_id
+        self.reliability = reliability
+        self.peer_capacity_pages = peer_capacity_pages
+        self.lend_page_s = lend_page_s
+        self.recall_rtt_s = recall_rtt_s
+        self.recall_page_s = recall_page_s
+        self._store: dict[int, bytes] = {}  # lease id -> lent payload
+        self.stats = {
+            "pages_lent": 0,
+            "pages_recalled": 0,
+            "recall_misses": 0,
+            "lend_rejects": 0,
+            "sim_lend_s": 0.0,
+            "sim_recall_s": 0.0,
+        }
+
+    # ------------------------------------------------------------- placement
+    def peers(self) -> list[str]:
+        """Lending candidates: cloudlet co-members, most reliable first
+        (unrecorded hosts last, alphabetical — deterministic)."""
+        cands = self.registry.peers(self.cloudlet, self.host_id)
+        if self.reliability is None:
+            return sorted(cands)
+        known = [h for h in cands if h in self.reliability]
+        unknown = sorted(h for h in cands if h not in self.reliability)
+        return self.reliability.ranked(known) + unknown
+
+    def held_pages(self, peer: str) -> int:
+        """Pages ``peer`` currently stores for this cloudlet (its lending
+        budget is shared across all lenders)."""
+        return sum(
+            1 for m in self.registry.leases.held_by(peer)
+            if m.cloudlet == self.cloudlet
+        )
+
+    def _retry_factor(self, peer: str) -> float:
+        if self.reliability is None or peer not in self.reliability:
+            return 1.0
+        p = min(self.reliability.failure_probability(peer), 0.95)
+        return 1.0 / (1.0 - p)
+
+    # ------------------------------------------------------------ lend/recall
+    def lend(self, payload: bytes) -> PageLease | None:
+        """Lend one serialized page to the most reliable peer with spare
+        capacity; returns the lease, or None (caller must evict) when no
+        peer can take it."""
+        for peer in self.peers():
+            if self.held_pages(peer) >= self.peer_capacity_pages:
+                continue
+            lease = self.registry.leases.grant(
+                self.cloudlet, self.host_id, peer, len(payload)
+            )
+            self._store[lease.lease_id] = payload
+            self.stats["pages_lent"] += 1
+            self.stats["sim_lend_s"] += (
+                self.lend_page_s * self._retry_factor(peer)
+            )
+            return lease
+        self.stats["lend_rejects"] += 1
+        return None
+
+    def lease_valid(self, lease_id: int) -> bool:
+        """A lease is recallable iff the table still has it, its holder is
+        still a cloudlet member, and the payload is still stored."""
+        lease = self.registry.leases.get(lease_id)
+        return (
+            lease is not None
+            and lease.holder in self.registry.get(self.cloudlet).members
+            and lease_id in self._store
+        )
+
+    def recall(self, lease_ids: list[int]
+               ) -> tuple[dict[int, bytes | None], float]:
+        """Batched recall of lent pages. Returns ``(payloads, wait_s)``:
+        per-lease payload bytes (None = miss, the holder churned away) and
+        the simulated wall-clock wait — one RTT per distinct peer plus a
+        reliability-scaled per-page transfer cost."""
+        out: dict[int, bytes | None] = {}
+        wait = 0.0
+        peers_hit: set[str] = set()
+        for lid in lease_ids:
+            if not self.lease_valid(lid):
+                # churned holder (or revoked lease): drop any orphaned
+                # payload; the caller falls back to recompute
+                self._store.pop(lid, None)
+                self.registry.leases.release(lid)
+                out[lid] = None
+                self.stats["recall_misses"] += 1
+                continue
+            lease = self.registry.leases.release(lid)
+            out[lid] = self._store.pop(lid)
+            peers_hit.add(lease.holder)
+            wait += self.recall_page_s * self._retry_factor(lease.holder)
+            self.stats["pages_recalled"] += 1
+        wait += self.recall_rtt_s * len(peers_hit)
+        self.stats["sim_recall_s"] += wait
+        return out, wait
+
+    def release(self, lease_id: int) -> None:
+        """Drop a lease whose page will never be recalled (its trie stub
+        was evicted): frees the peer's capacity immediately."""
+        self._store.pop(lease_id, None)
+        self.registry.leases.release(lease_id)
+
+    @property
+    def lent(self) -> int:
+        return len(self._store)
 
 
 def init_paged_cache(model: ModelFns, n_slots: int, n_pages: int,

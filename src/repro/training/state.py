@@ -36,9 +36,10 @@ def init_train_state(model: ModelFns, seed: int = 0) -> TrainState:
 def abstract_train_state(model: ModelFns) -> TrainState:
     """ShapeDtypeStruct stand-ins (dry-run: no allocation)."""
     params = model.abstract_params()
-    zeros_like = lambda t: jax.tree.map(
-        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), t
-    )
+    def zeros_like(t):
+        return jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), t
+        )
     key_data = jax.eval_shape(
         lambda: jax.random.key_data(jax.random.key(0))
     )

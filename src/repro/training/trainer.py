@@ -27,7 +27,7 @@ import numpy as np
 
 from repro.checkpoint.serializer import deserialize_tree, serialize_tree
 from repro.checkpoint.store import SnapshotStore
-from repro.config import ModelConfig, RunConfig, ShapeConfig
+from repro.config import ModelConfig, RunConfig
 from repro.core.availability import GUEST_PROBE_INTERVAL_S, POLL_INTERVAL_S
 from repro.core.client import AdHocClient
 from repro.core.server import AdHocServer, JobState

@@ -1,7 +1,5 @@
 """End-to-end ad hoc cloud simulation (the paper-§IV experiment harness)."""
 
-import pytest
-
 from repro.core.cloud import AdHocCloudSim, SimParams
 from repro.core.events import constant_failure_trace, nagios_like_trace
 from repro.core.server import JobState

@@ -4,7 +4,6 @@ All kernels run in ``interpret=True`` (CPU) and must match ``ref.py``
 within dtype-appropriate tolerances.
 """
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -1,0 +1,415 @@
+"""Multi-host page spill: lease bookkeeping, the remote pool, and the
+spill/recall serving engine under churn.
+
+- :class:`LeaseTable` grant/release/invalidate + registry ``leave``
+  integration and state round-trip;
+- :class:`PagePool` LRU last-touch order (alloc retires the coldest free
+  pages, ``touch`` re-warms cached ones);
+- :class:`PrefixIndex.remap` keeps a spilled node's subtree reachable;
+- :class:`RemotePagePool` lend/recall byte-exactness, reliability-ranked
+  peer choice, capacity limits, and churn-revoked leases missing;
+- engine: spilling instead of evicting under page pressure, recall on a
+  spilled-prefix hit with token-for-token parity, peer ``leave()``
+  mid-recall falling back to recompute (still parity), the per-request
+  recall budget, and snapshot/restore round-tripping page leases without
+  double-free.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import REDUCED
+from repro.core.cloudlet import CloudletRegistry, LeaseTable
+from repro.core.reliability import ReliabilityRegistry
+from repro.models import get_model
+from repro.serving.engine import ServeEngine
+from repro.serving.kvcache import PagePool, PrefixIndex, RemotePagePool
+
+PAGE = 16
+
+
+# ---------------------------------------------------------------------------
+# LeaseTable + registry churn
+# ---------------------------------------------------------------------------
+
+
+def test_lease_table_grant_release_invalidate():
+    t = LeaseTable()
+    a = t.grant("serve", "h0", "h1", 100)
+    b = t.grant("serve", "h0", "h2", 200)
+    c = t.grant("train", "h3", "h1", 300)
+    assert len(t) == 3 and t.valid(a.lease_id)
+    assert {m.lease_id for m in t.held_by("h1")} == {a.lease_id, c.lease_id}
+    assert {m.lease_id for m in t.of_lender("h0")} == {a.lease_id, b.lease_id}
+    # scoped invalidation: h1 leaves "serve" but stays in "train"
+    gone = t.invalidate_holder("h1", cloudlet="serve")
+    assert gone == [a.lease_id]
+    assert t.valid(c.lease_id) and not t.valid(a.lease_id)
+    assert t.release(b.lease_id).holder == "h2"
+    assert t.release(b.lease_id) is None  # idempotent
+    assert len(t) == 1
+
+
+def test_lease_table_state_round_trip():
+    t = LeaseTable()
+    t.grant("serve", "h0", "h1", 64)
+    t.grant("serve", "h0", "h2", 128)
+    clone = LeaseTable.from_state(t.to_state())
+    assert len(clone) == 2
+    # id allocation continues where the original left off
+    assert clone.grant("serve", "h0", "h1", 1).lease_id == 3
+
+
+def test_registry_leave_revokes_held_leases():
+    reg = CloudletRegistry()
+    reg.create("serve", "arch")
+    for h in ("h0", "h1", "h2"):
+        reg.join("serve", h)
+    a = reg.leases.grant("serve", "h0", "h1", 10)
+    b = reg.leases.grant("serve", "h0", "h2", 10)
+    assert reg.leave("serve", "h1") == [a.lease_id]
+    assert "h1" not in reg.get("serve")
+    assert reg.leases.valid(b.lease_id)
+    assert reg.leave_all("h2") == [b.lease_id]
+    assert len(reg.leases) == 0
+
+
+def test_registry_rejects_reserved_cloudlet_names():
+    reg = CloudletRegistry()
+    with pytest.raises(ValueError):
+        reg.create("__leases__", "arch")  # would collide with state key
+
+
+def test_registry_state_round_trips_leases():
+    reg = CloudletRegistry()
+    reg.create("serve", "arch")
+    reg.join("serve", "h0")
+    reg.join("serve", "h1")
+    reg.leases.grant("serve", "h0", "h1", 42)
+    clone = CloudletRegistry.from_state(reg.to_state())
+    assert clone.names() == ["serve"]
+    assert len(clone.leases) == 1
+    assert clone.leases.get(1).holder == "h1"
+    # leaving in the clone revokes the restored lease
+    assert clone.leave_all("h1") == [1]
+
+
+# ---------------------------------------------------------------------------
+# PagePool LRU + PrefixIndex remap
+# ---------------------------------------------------------------------------
+
+
+def test_pool_alloc_retires_coldest_pages_first():
+    pool = PagePool(8)
+    a = pool.alloc(7)            # touch every page once
+    pool.free(a)                 # freed in order: a[0] coldest ... a[6] warmest
+    pool.touch([a[0]])           # prefix hit re-warms the oldest page
+    got = pool.alloc(2)
+    assert got == [a[1], a[2]]   # coldest free pages, not the re-warmed one
+    # never-touched pages are colder than anything freed
+    fresh = PagePool(8)
+    b = fresh.alloc(2)
+    fresh.free(b)
+    assert fresh.alloc(2) == [3, 4]
+
+
+def test_pool_touch_survives_snapshot():
+    pool = PagePool(8)
+    a = pool.alloc(3)
+    pool.free(a)
+    pool.touch([a[0]])
+    free, ref, touch = pool.serialize()
+    clone = PagePool(8)
+    clone.restore(free, ref, touch)
+    assert clone.alloc(2) == pool.alloc(2)  # same eviction order
+
+
+def test_prefix_index_remap_preserves_subtree():
+    idx = PrefixIndex(4)
+    toks = [1] * 4 + [2] * 4 + [3] * 4
+    idx.insert(toks, [10, 11, 12])
+    idx.remap(11, 99)            # page 11 spilled: stub id 99
+    assert idx.lookup(toks) == [10, 99, 12]
+    idx.remap(99, 5)             # recalled into physical page 5
+    assert idx.lookup(toks) == [10, 5, 12]
+    dropped = idx.evict_pages([5])
+    assert set(dropped) == {5, 12}  # subtree reported for lease cleanup
+    assert idx.lookup(toks) == [10]
+
+
+# ---------------------------------------------------------------------------
+# RemotePagePool
+# ---------------------------------------------------------------------------
+
+
+def _cloudlet(peers=("h1", "h2"), fail=()):
+    reg = CloudletRegistry()
+    reg.create("serve", "arch")
+    reg.join("serve", "h0")
+    rel = ReliabilityRegistry()
+    for h in peers:
+        reg.join("serve", h)
+        rel.add_host(h)
+        if h in fail:
+            rel.record_assignment(h)
+            rel.record_host_failure(h)
+    return reg, rel
+
+
+def test_remote_pool_lend_recall_byte_exact():
+    reg, rel = _cloudlet()
+    pool = RemotePagePool(reg, "serve", "h0", reliability=rel)
+    blobs = [bytes([i]) * 37 for i in range(4)]
+    leases = [pool.lend(b) for b in blobs]
+    assert pool.lent == 4 and len(reg.leases) == 4
+    got, wait = pool.recall([m.lease_id for m in leases])
+    assert [got[m.lease_id] for m in leases] == blobs
+    assert wait > 0
+    assert pool.lent == 0 and len(reg.leases) == 0
+
+
+def test_remote_pool_prefers_reliable_peers_and_respects_capacity():
+    reg, rel = _cloudlet(peers=("h1", "h2"), fail=("h1",))
+    pool = RemotePagePool(reg, "serve", "h0", reliability=rel,
+                          peer_capacity_pages=2)
+    holders = [pool.lend(b"x").holder for _ in range(4)]
+    assert holders == ["h2", "h2", "h1", "h1"]  # reliable first, then spill over
+    assert pool.lend(b"x") is None              # everyone full
+    assert pool.stats["lend_rejects"] == 1
+
+
+def test_remote_pool_churned_holder_recall_misses():
+    reg, rel = _cloudlet()
+    pool = RemotePagePool(reg, "serve", "h0", reliability=rel,
+                          peer_capacity_pages=1)
+    a = pool.lend(b"a")          # -> h1 (alphabetical tie on fresh hosts)
+    b = pool.lend(b"b")          # -> h2
+    reg.leave("serve", a.holder)
+    got, _ = pool.recall([a.lease_id, b.lease_id])
+    assert got[a.lease_id] is None
+    assert got[b.lease_id] == b"b"
+    assert pool.stats["recall_misses"] == 1
+    assert pool.lent == 0        # orphaned payload dropped on the miss
+
+
+# ---------------------------------------------------------------------------
+# Engine: spill under pressure, recall parity, churn, budget, snapshot
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def qwen():
+    cfg = REDUCED["qwen3-8b"]
+    model = get_model(cfg)
+    params = model.init(jax.random.key(0))
+    return cfg, model, params
+
+
+def _spill_setup(n_peers=2):
+    reg = CloudletRegistry()
+    reg.create("serve", "qwen3-8b")
+    reg.join("serve", "h0")
+    rel = ReliabilityRegistry()
+    for i in range(1, n_peers + 1):
+        reg.join("serve", f"h{i}")
+        rel.add_host(f"h{i}")
+    return reg, RemotePagePool(reg, "serve", "h0", reliability=rel)
+
+
+def _engine(model, params, remote=None, **kw):
+    kw.setdefault("n_slots", 1)
+    kw.setdefault("max_seq", 96)
+    kw.setdefault("page_size", PAGE)
+    kw.setdefault("prefill_chunk", 32)
+    kw.setdefault("n_pages", 6)  # 5 usable: two 2-page prefixes can't both stay
+    return ServeEngine(model, params, paged=True, remote_pool=remote, **kw)
+
+
+def _prefixes(cfg, n, seed=1):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(1, cfg.vocab_size, 2 * PAGE).tolist()
+            for _ in range(n)]
+
+
+def _reqs(cfg, prefix, n, seed):
+    rng = np.random.default_rng(seed)
+    return [prefix + rng.integers(1, cfg.vocab_size, 6).tolist()
+            for _ in range(n)]
+
+
+def _run_phases(cfg, engines, prefixes, *, rounds=2, seed0=100):
+    """Alternate prefixes across rounds; returns per-engine outputs."""
+    outs = [[] for _ in engines]
+    seed = seed0
+    for _ in range(rounds):
+        for pref in prefixes:
+            seed += 1
+            for eng, acc in zip(engines, outs):
+                reqs = [eng.submit(p, max_new_tokens=4)
+                        for p in _reqs(cfg, pref, 2, seed)]
+                eng.run(400)
+                acc.extend(tuple(r.generated) for r in reqs)
+    return outs
+
+
+def test_spill_recall_round_trip_parity(qwen):
+    """Under page pressure cold prefix pages are lent, not evicted; a
+    later hit recalls them — token-for-token identical to the no-spill
+    engine, with fewer prompt tokens recomputed."""
+    cfg, model, params = qwen
+    _, remote = _spill_setup()
+    eng = _engine(model, params, remote)
+    base = _engine(model, params, None)
+    spill_out, base_out = _run_phases(cfg, [eng, base], _prefixes(cfg, 2))
+    assert spill_out == base_out
+    assert eng.stats["pages_spilled"] > 0
+    assert eng.stats["pages_recalled"] > 0
+    assert eng.stats["recall_misses"] == 0
+    assert eng.stats["prefix_evictions"] < base.stats["prefix_evictions"]
+    assert eng.stats["prefill_tokens"] < base.stats["prefill_tokens"]
+    assert eng.stats["recall_hold_steps"] > 0  # latency was accounted
+    # no leaks anywhere: local pool drains, every lease resolved or live
+    assert eng.pool.outstanding == 0
+    assert remote.lent == len(eng.spilled)
+
+
+def test_peer_leave_mid_recall_falls_back_to_recompute(qwen):
+    """Churn: every peer leaves while pages are lent out. The next hit on
+    the spilled prefix misses, drops the stubs, recomputes — and still
+    produces exactly the no-spill tokens."""
+    cfg, model, params = qwen
+    reg, remote = _spill_setup()
+    eng = _engine(model, params, remote)
+    base = _engine(model, params, None)
+    prefixes = _prefixes(cfg, 2, seed=2)
+    _run_phases(cfg, [eng, base], prefixes, rounds=1)
+    assert eng.stats["pages_spilled"] > 0 and remote.lent > 0
+    # both peers churn away mid-flight, taking every lent page
+    for h in ("h1", "h2"):
+        reg.leave_all(h)
+    assert len(reg.leases) == 0
+    out, bout = [], []
+    for pref in prefixes:
+        r = [eng.submit(p, max_new_tokens=4)
+             for p in _reqs(cfg, pref, 2, 999)]
+        b = [base.submit(p, max_new_tokens=4)
+             for p in _reqs(cfg, pref, 2, 999)]
+        eng.run(400)
+        base.run(400)
+        out.extend(tuple(x.generated) for x in r)
+        bout.extend(tuple(x.generated) for x in b)
+    assert out == bout
+    assert eng.stats["recall_misses"] > 0
+    assert eng.stats["pages_recalled"] == 0   # nothing was recallable
+    assert len(eng.spilled) == 0              # stale stubs all dropped
+    assert eng.pool.outstanding == 0
+
+
+def test_recall_budget_bounds_recalls_per_admission(qwen):
+    """A request whose spilled prefix exceeds ``recall_budget`` recalls at
+    most that many pages; the rest of the prefix is recomputed — outputs
+    unchanged."""
+    cfg, model, params = qwen
+    _, remote = _spill_setup()
+    eng = _engine(model, params, remote, recall_budget=1)
+    base = _engine(model, params, None)
+    spill_out, base_out = _run_phases(cfg, [eng, base],
+                                      _prefixes(cfg, 2, seed=3))
+    assert spill_out == base_out
+    assert eng.stats["pages_recalled"] <= eng.stats["prefix_hits"]
+
+
+def test_spill_snapshot_restore_round_trips_leases(qwen):
+    """Snapshot with pages lent out, restore on a 'substitute host' wired
+    to the same cloudlet: stubs revalidate, recalls still work, outputs
+    replay identically, and draining everything frees each page exactly
+    once (no double-free, no refcount leak)."""
+    cfg, model, params = qwen
+    _, remote = _spill_setup()
+    prefixes = _prefixes(cfg, 2, seed=4)
+
+    ref_eng = _engine(model, params, None)
+    base_out = _run_phases(cfg, [ref_eng], prefixes)[0]
+
+    eng = _engine(model, params, remote)
+    out_a = _run_phases(cfg, [eng], prefixes, rounds=1)[0]
+    assert eng.stats["pages_spilled"] > 0 and remote.lent > 0
+    blob = eng.snapshot()
+
+    eng2 = _engine(model, params, remote)
+    eng2.restore(blob)
+    assert eng2.spilled == eng.spilled          # stubs revalidated
+    # second round (same suffix seeds the reference used for round 2)
+    out_b = _run_phases(cfg, [eng2], prefixes, rounds=1,
+                        seed0=100 + len(prefixes))[0]
+    assert out_a + out_b == base_out
+    assert eng2.stats["pages_recalled"] > 0     # recalled after restore
+    assert eng2.pool.outstanding == 0
+    assert eng2.pool.available == eng2.n_pages - 1
+    assert remote.lent == len(eng2.spilled)
+
+
+def test_restore_releases_descendant_leases_of_churned_ancestor(qwen):
+    """A snapshot whose spilled chain spans two peers, restored after the
+    *ancestor's* holder churned: evicting the ancestor stub must release
+    the descendant's still-valid lease too (its page is unreachable), not
+    leak peer capacity forever."""
+    cfg, model, params = qwen
+    reg, remote = _spill_setup()
+    eng = _engine(model, params, remote, recall_budget=8)
+    _run_phases(cfg, [eng], _prefixes(cfg, 2, seed=6), rounds=1)
+    assert eng.stats["pages_spilled"] >= 2
+    # force a parent/child stub pair onto different peers if not already:
+    # find any stub whose trie parent is also a stub
+    pairs = [
+        (sid, eng.prefix_index._nodes[sid][0]) for sid in eng.spilled
+        if eng.prefix_index._nodes[sid][0] in eng.spilled
+    ]
+    if not pairs:
+        pytest.skip("workload produced no stacked spilled chain")
+    child, parent = pairs[0]
+    blob = eng.snapshot()
+    # the *parent's* holder churns while the snapshot sits idle
+    reg.leave_all(eng.spilled[parent].peer)
+    eng2 = _engine(model, params, remote)
+    eng2.restore(blob)
+    # neither stub survived, and neither lease lingers in the table/store
+    assert parent not in eng2.spilled and child not in eng2.spilled
+    for sid in (parent, child):
+        assert not reg.leases.valid(eng.spilled[sid].lease_id)
+    assert remote.lent == len(eng2.spilled)
+
+
+def test_restore_without_remote_pool_drops_stubs_safely(qwen):
+    """A snapshot holding spill stubs restored on a host with no spill
+    tier (outside the cloudlet) recomputes those prefixes — parity, no
+    poisoned page tables."""
+    cfg, model, params = qwen
+    _, remote = _spill_setup()
+    prefixes = _prefixes(cfg, 2, seed=5)
+
+    ref_eng = _engine(model, params, None)
+    base_out = _run_phases(cfg, [ref_eng], prefixes)[0]
+
+    eng = _engine(model, params, remote)
+    out_a = _run_phases(cfg, [eng], prefixes, rounds=1)[0]
+    assert eng.stats["pages_spilled"] > 0
+    blob = eng.snapshot()
+
+    eng2 = _engine(model, params, None)
+    eng2.restore(blob)
+    assert len(eng2.spilled) == 0
+    out_b = _run_phases(cfg, [eng2], prefixes, rounds=1,
+                        seed0=100 + len(prefixes))[0]
+    assert out_a + out_b == base_out
+    assert eng2.stats["pages_recalled"] == 0
+    assert eng2.pool.outstanding == 0
+
+
+def test_spill_requires_paged_mode(qwen):
+    cfg, model, params = qwen
+    _, remote = _spill_setup()
+    with pytest.raises(ValueError):
+        ServeEngine(model, params, n_slots=2, max_seq=96, paged=False,
+                    remote_pool=remote)
