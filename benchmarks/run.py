@@ -12,12 +12,13 @@ Sections:
 - roofline     — per-cell roofline terms from dry-run artifacts
 - serving      — paged vs dense serving engine + copy-on-write prefix
                  sharing vs the non-shared paged path + multi-host page
-                 spill under churn (BENCH_SERVING; also written
-                 machine-readably to BENCH_SERVING.json at the repo root
-                 so the perf trajectory is tracked across PRs — run
-                 `python -m benchmarks.serving_bench --prefix-share` or
-                 `--spill` for one scenario alone; REPRO_BENCH_TINY=1
-                 shrinks everything for the CI smoke job)
+                 spill under churn + vlm paged serving (BENCH_SERVING;
+                 also written machine-readably to BENCH_SERVING.json at
+                 the repo root so the perf trajectory is tracked across
+                 PRs — run `python -m benchmarks.serving_bench
+                 --prefix-share`, `--spill` or `--vlm-paged` for one
+                 scenario alone; REPRO_BENCH_TINY=1 shrinks everything
+                 for the CI smoke job)
 """
 
 import argparse

@@ -45,6 +45,13 @@ resident* cache bytes per slot (live + free-but-cached pages — what the
 spill tier actually shrinks). Token parity across all three is asserted
 (the churn-safety invariant: recalls and misses never change tokens).
 
+**vlm-paged** (``--vlm-paged`` standalone) — the VLM family through the
+paged path: requests carry one shared image plus a shared text prefix
+and unique tails, so image rows chunk through the paged prefill inline
+and the image+text prefix COW-shares. Reports paged vs dense
+cache-bytes/slot, prefill tokens computed vs served from shared pages,
+and token parity against an exact unpadded multimodal reference.
+
 Engines see each workload once as warmup (covering every bucket size /
 chunk offset) before the measured pass, so the numbers are compile-free
 (the spill scenario skips warmup and timing: its headline numbers are
@@ -85,6 +92,15 @@ PS_SUFFIX = 64
 PS_REQS = 4 if TINY else 8
 PS_SLOTS = 2 if TINY else 4
 
+# vlm-paged scenario: image+text requests through the paged path, vs the
+# dense bucketed engine and an exact unpadded reference
+VLM_ARCH = "llava-next-mistral-7b"
+VISION_D = 1024
+VLM_PREFIX = 64 if TINY else 192     # shared text prefix after the image
+VLM_SUFFIX = 32 if TINY else 64      # unique tail per request
+VLM_REQS = 4 if TINY else 8
+VLM_SLOTS = 2 if TINY else 4
+
 # spill scenario: distinct prefixes cycling through an undersized pool
 SP_PREFIX_PAGES = 2 if TINY else 4   # prefix length in pages
 SP_SUFFIX = 16 if TINY else 32
@@ -112,7 +128,7 @@ def make_workload(cfg, seed):
     return [rng.integers(1, cfg.vocab_size, n).tolist() for n in PROMPT_LENS]
 
 
-def run_workload(engine, prompts, *, timed):
+def run_workload(engine, prompts, *, timed, extra=None):
     """Submit + drain one workload; returns (tokens/s, mean admission s)."""
     admissions = []
     if engine.paged:
@@ -134,7 +150,8 @@ def run_workload(engine, prompts, *, timed):
 
         engine._prefill_into = timed_admit
 
-    reqs = [engine.submit(p, max_new_tokens=MAX_NEW) for p in prompts]
+    reqs = [engine.submit(p, max_new_tokens=MAX_NEW, extra=extra)
+            for p in prompts]
     t0 = time.perf_counter()
     engine.run(5000)
     wall = time.perf_counter() - t0
@@ -149,17 +166,21 @@ def run_workload(engine, prompts, *, timed):
     return reqs, n_tok / wall, float(np.mean(admissions))
 
 
-def exact_reference(model, params, prompt, n_new):
+def exact_reference(model, params, prompt, n_new, extra=None):
     """Greedy continuation from an exact (unpadded) prefill."""
     from repro.serving.kvcache import expand_prefill_cache
 
-    logits, cache = jax.jit(model.prefill)(
-        params, {"tokens": jnp.asarray([prompt], jnp.int32)}
-    )
+    batch = {"tokens": jnp.asarray([prompt], jnp.int32)}
+    mm = 0
+    for k, v in (extra or {}).items():
+        batch[k] = jnp.asarray(v)
+        if k == "embeds":  # vlm image rows occupy leading cache positions
+            mm = int(np.asarray(v).shape[-2])
+    logits, cache = jax.jit(model.prefill)(params, batch)
     out = [int(jnp.argmax(logits[0]))]
     cache = expand_prefill_cache(cache, model.init_cache(1, MAX_SEQ))
     dec = jax.jit(model.decode_step)
-    pos = len(prompt)
+    pos = mm + len(prompt)
     for _ in range(n_new - 1):
         lg, cache = dec(params, cache, {
             "tokens": jnp.asarray([[out[-1]]], jnp.int32),
@@ -322,6 +343,96 @@ def _prefix_share_scenario(rows, cfg, model, params) -> None:
               f"({1 - got / base:.1%} avoided)")
 
 
+def _vlm_workload(cfg, seed):
+    """VLM_REQS image+text prompts: one shared image, a shared
+    ``VLM_PREFIX``-token system prompt, and a unique ``VLM_SUFFIX`` tail —
+    the shared image+text prefix exercises multimodal COW sharing."""
+    rng = np.random.default_rng(seed)
+    prefix = rng.integers(1, cfg.vocab_size, VLM_PREFIX).tolist()
+    return [prefix + rng.integers(1, cfg.vocab_size, VLM_SUFFIX).tolist()
+            for _ in range(VLM_REQS)]
+
+
+def _vlm_paged_scenario(rows) -> None:
+    """Paged vs dense serving for the VLM family: image embeddings chunk
+    through the paged prefill (inline modality rows), so vlm rides the
+    page pool, prefix sharing, and spill paths like any text family.
+    Token parity is checked against an exact unpadded multimodal prefill
+    (the dense engine buckets text, so it is only approximate here)."""
+    from repro.configs import REDUCED
+    from repro.models import get_model
+    from repro.serving.engine import ServeEngine
+
+    cfg = REDUCED[VLM_ARCH]
+    model = get_model(cfg)
+    params = model.init(jax.random.key(1))
+    n_img = cfg.n_image_tokens
+    img = np.random.default_rng(31).standard_normal(
+        (1, n_img, VISION_D)).astype(np.float32)
+    extra = {"embeds": img}
+
+    max_pages = -(-MAX_SEQ // PAGE_SIZE)
+    tlen = n_img + VLM_PREFIX + VLM_SUFFIX
+    biggest = -(-(tlen + MAX_NEW) // PAGE_SIZE)
+    n_pages = max(int(0.47 * VLM_SLOTS * max_pages), biggest + 2)
+
+    print(f"\nvlm-paged bench: {VLM_ARCH} (reduced), {VLM_REQS} reqs x "
+          f"({n_img} image + {VLM_PREFIX} shared + {VLM_SUFFIX} unique), "
+          f"{VLM_SLOTS} slots, page {PAGE_SIZE}")
+    print(f"{'engine':>6} {'tok/s':>8} {'cacheB/slot':>12} "
+          f"{'prefill tok':>11} {'shared tok':>10} {'match':>6}")
+
+    exact = {}
+    results = {}
+    for kind in ("dense", "paged"):
+        kw = dict(n_slots=VLM_SLOTS, max_seq=MAX_SEQ)
+        if kind == "paged":
+            kw.update(paged=True, page_size=PAGE_SIZE, n_pages=n_pages,
+                      prefill_chunk=PREFILL_CHUNK)
+        else:
+            kw.update(paged=False)
+        engine = ServeEngine(model, params, **kw)
+        run_workload(engine, _vlm_workload(cfg, seed=41), timed=False,
+                     extra=extra)
+        engine.reset_stats()
+        reqs, tps, admit = run_workload(
+            engine, _vlm_workload(cfg, seed=42), timed=True, extra=extra
+        )
+        results[kind] = {
+            "reqs": sorted(reqs, key=lambda r: r.req_id),
+            "tok_s": tps,
+            "bytes_slot": cache_bytes(engine) / VLM_SLOTS,
+            "stats": dict(engine.stats),
+        }
+
+    # parity oracle: the exact unpadded multimodal prefill + decode
+    match = True
+    for rp in results["paged"]["reqs"]:
+        key = tuple(rp.prompt)
+        if key not in exact:
+            exact[key] = exact_reference(model, params, rp.prompt, MAX_NEW,
+                                         extra=extra)
+        match &= rp.generated == exact[key]
+
+    ratio = results["paged"]["bytes_slot"] / results["dense"]["bytes_slot"]
+    for kind in ("dense", "paged"):
+        r = results[kind]
+        print(f"{kind:>6} {r['tok_s']:>8.1f} {r['bytes_slot']:>12.0f} "
+              f"{r['stats']['prefill_tokens']:>11} "
+              f"{r['stats']['prefill_tokens_shared']:>10} "
+              f"{str(match) if kind == 'paged' else '':>6}")
+        rows.append({
+            "bench": "serving-vlm", "engine": kind, "slots": VLM_SLOTS,
+            "n_image_tokens": n_img,
+            "tokens_per_s": round(r["tok_s"], 2),
+            "cache_bytes_per_slot": int(r["bytes_slot"]),
+            "prefill_tokens": r["stats"]["prefill_tokens"],
+            "prefill_tokens_shared": r["stats"]["prefill_tokens_shared"],
+            "match": match if kind == "paged" else "",
+        })
+    print(f"       paged/dense cache bytes per slot: {ratio:.2%}")
+
+
 def _spill_scenario(rows, cfg, model, params) -> None:
     from repro.core.cloudlet import CloudletRegistry
     from repro.core.reliability import ReliabilityRegistry
@@ -444,7 +555,8 @@ def write_json(rows) -> None:
 
 
 def main(rows=None,
-         scenarios=("paged", "prefix-share", "spill")) -> list[dict]:
+         scenarios=("paged", "prefix-share", "spill",
+                    "vlm-paged")) -> list[dict]:
     rows = rows if rows is not None else []
     from repro.configs import REDUCED
     from repro.models import get_model
@@ -459,6 +571,8 @@ def main(rows=None,
         _prefix_share_scenario(rows, cfg, model, params)
     if "spill" in scenarios:
         _spill_scenario(rows, cfg, model, params)
+    if "vlm-paged" in scenarios:
+        _vlm_paged_scenario(rows)
     write_json(rows[mark:])
     return rows
 
@@ -471,10 +585,15 @@ if __name__ == "__main__":
                     help="run only the prefix-sharing scenario")
     ap.add_argument("--spill", action="store_true",
                     help="run only the multi-host spill scenario")
+    ap.add_argument("--vlm-paged", action="store_true",
+                    help="run only the vlm paged-serving scenario")
     args = ap.parse_args()
     only = []
     if args.prefix_share:
         only.append("prefix-share")
     if args.spill:
         only.append("spill")
-    main(scenarios=tuple(only) or ("paged", "prefix-share", "spill"))
+    if args.vlm_paged:
+        only.append("vlm-paged")
+    main(scenarios=tuple(only)
+         or ("paged", "prefix-share", "spill", "vlm-paged"))

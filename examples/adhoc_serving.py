@@ -1,6 +1,14 @@
-"""Serving on the ad hoc cloud: a batched inference guest survives a host
-failure mid-generation and resumes on a substitute host with identical
+"""Serving on the ad hoc cloud: batched inference guests survive a host
+failure mid-generation and resume on a substitute host with identical
 outputs (greedy decoding + snapshot continuity).
+
+Two guests run the same failure drill:
+
+- a text LLM (qwen3, paged KV cache + chunked prefill), and
+- a VLM (llava) with a mixed image+text request set — multimodal
+  families ride the same paged path, so a shared image + shared system
+  prompt is COW-shared across requests and the whole engine state
+  (page pool, tables, prefix trie) travels in one snapshot blob.
 
     PYTHONPATH=src python examples/adhoc_serving.py
 """
@@ -12,37 +20,73 @@ from repro.configs import REDUCED
 from repro.models import get_model
 from repro.serving.engine import ServeEngine
 
-ARCH = "qwen3-8b"
-cfg = REDUCED[ARCH]
+VISION_D = 1024
+
+
+def failure_drill(name, model, params, submits, **engine_kw):
+    """Run reference vs interrupted-and-restored engines; assert parity."""
+    engine_kw.setdefault("n_slots", 3)
+    engine_kw.setdefault("max_seq", 128)
+    ref = ServeEngine(model, params, **engine_kw)
+    for args, kw in submits:
+        ref.submit(*args, **kw)
+    ref_done = sorted(ref.run(), key=lambda r: r.req_id)
+    print(f"[{name}] reference host served {len(ref_done)} requests")
+
+    engine = ServeEngine(model, params, **engine_kw)
+    for args, kw in submits:
+        engine.submit(*args, **kw)
+    for _ in range(4):
+        engine.step()
+    print(f"[{name}] host failure! latest P2P snapshot restored on a peer "
+          "(paper §III-D)...")
+    snapshot = engine.snapshot()      # this is what peers already hold
+
+    substitute = ServeEngine(model, params, **engine_kw)
+    substitute.restore(snapshot)
+    done = sorted(substitute.run(), key=lambda r: r.req_id)
+
+    match = all(a.generated == b.generated for a, b in zip(ref_done, done))
+    for r in done[:3]:
+        print(f"  req {r.req_id}: {r.prompt[:3]}... -> {r.generated}")
+    print(f"[{name}] all {len(done)} continuations identical to the "
+          f"failure-free host: {match}\n")
+    assert match
+    return substitute
+
+
+# --- text guest: qwen3 through the paged engine ---------------------------
+cfg = REDUCED["qwen3-8b"]
 model = get_model(cfg)
 params = model.init(jax.random.key(0))
 rng = np.random.default_rng(0)
-prompts = [rng.integers(1, cfg.vocab_size, 8).tolist() for _ in range(6)]
+text_submits = [
+    ((rng.integers(1, cfg.vocab_size, 8).tolist(),),
+     dict(max_new_tokens=10))
+    for _ in range(6)
+]
+failure_drill("text", model, params, text_submits)
 
-# --- reference: uninterrupted serving on a reliable host -----------------
-ref = ServeEngine(model, params, n_slots=3, max_seq=128)
-for p in prompts:
-    ref.submit(p, max_new_tokens=10)
-ref_done = sorted(ref.run(), key=lambda r: r.req_id)
-print(f"reference host served {len(ref_done)} requests")
-
-# --- ad hoc host: dies after 4 engine steps -------------------------------
-engine = ServeEngine(model, params, n_slots=3, max_seq=128)
-for p in prompts:
-    engine.submit(p, max_new_tokens=10)
-for _ in range(4):
-    engine.step()
-print("host failure! latest P2P snapshot restored on a peer "
-      "(paper §III-D)...")
-snapshot = engine.snapshot()          # this is what peers already hold
-
-substitute = ServeEngine(model, params, n_slots=3, max_seq=128)
-substitute.restore(snapshot)
-done = sorted(substitute.run(), key=lambda r: r.req_id)
-
-match = all(a.generated == b.generated for a, b in zip(ref_done, done))
-for r in done[:3]:
-    print(f"  req {r.req_id}: {r.prompt[:3]}... -> {r.generated}")
-print(f"\nall {len(done)} continuations identical to the "
-      f"failure-free host: {match}")
-assert match
+# --- vlm guest: llava with a mixed image+text request set ------------------
+vcfg = REDUCED["llava-next-mistral-7b"]
+vmodel = get_model(vcfg)
+vparams = vmodel.init(jax.random.key(1))
+images = [
+    rng.standard_normal((1, vcfg.n_image_tokens, VISION_D)).astype(np.float32)
+    for _ in range(2)
+]
+system_prompt = rng.integers(1, vcfg.vocab_size, 24).tolist()
+vlm_submits = []
+for i in range(6):
+    img = images[i % 2]               # two distinct images across the mix
+    prompt = system_prompt + rng.integers(1, vcfg.vocab_size, 6).tolist()
+    vlm_submits.append(((prompt,),
+                        dict(max_new_tokens=8, extra={"embeds": img})))
+# page_size 16: the shared image (8 rows) + system prompt spans full
+# pages, so the COW prefix sharing is visible in the stats below
+substitute = failure_drill("vlm", vmodel, vparams, vlm_submits,
+                           page_size=16)
+s = substitute.stats
+print(f"[vlm] prefix sharing across the mix: "
+      f"{s['prefill_tokens_shared']} prompt tokens served from shared "
+      f"pages ({s['prefix_hits']} hits, {s['cow_copies']} COW copies)")

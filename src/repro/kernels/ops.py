@@ -254,6 +254,64 @@ def _paged_decode_attention_xla(q, k_pages, v_pages, page_table, lengths):
 
 
 # ---------------------------------------------------------------------------
+# Paged cross attention (query block vs paged encoder-output cache)
+# ---------------------------------------------------------------------------
+
+
+def paged_cross_attention(
+    q: jax.Array,           # (B, C, H, D) — C query positions per sequence
+    k_pages: jax.Array,     # (n_pages, P, K, D) — shared page pool
+    v_pages: jax.Array,     # (n_pages, P, K, D)
+    page_table: jax.Array,  # (B, max_pages) int32
+    lengths: jax.Array,     # (B,) int32 — valid cross positions per sequence
+) -> jax.Array:
+    """Non-causal attention of a query block over a paged cross-attention
+    (encoder-output) region: the enc-dec decode step (C = 1) and chunked
+    prefill (C = chunk) both read the encoder pages through this one op.
+    Tested against :func:`repro.kernels.ref.paged_cross_attention`."""
+    b = current_backend()
+    if b == "xla":
+        return _paged_cross_attention_xla(q, k_pages, v_pages, page_table,
+                                          lengths)
+    # Pallas backends: fold the query positions into the batch dim and
+    # reuse the paged flash-decode kernel — "one query, length-masked,
+    # non-causal over paged KV" is exactly its contract, and every folded
+    # lane shares its sequence's page table and length.
+    B, C, H, D = q.shape
+    mod = _pallas("paged_decode_attention")
+    out = mod.paged_decode_attention(
+        q.reshape(B * C, H, D), k_pages, v_pages,
+        jnp.repeat(page_table, C, axis=0), jnp.repeat(lengths, C, axis=0),
+        interpret=(b == "pallas_interpret"),
+    )
+    return out.reshape(B, C, H, D)
+
+
+def _paged_cross_attention_xla(q, k_pages, v_pages, page_table, lengths):
+    """Pure-XLA paged cross attention: gather the pages through the table,
+    then one masked non-causal softmax. The gather is a transient — the
+    resident encoder cache stays paged."""
+    B, C, H, D = q.shape
+    K = k_pages.shape[2]
+    k = _expand_kv(k_pages[page_table].reshape(B, -1, K, D), H)
+    v = _expand_kv(v_pages[page_table].reshape(B, -1, K, D), H)
+    S = k.shape[1]
+    scale = D ** -0.5
+    s = jnp.einsum(
+        "bqhd,bkhd->bhqk", q.astype(jnp.float32) * scale,
+        k.astype(jnp.float32),
+    )
+    mask = jnp.arange(S)[None, :] < lengths[:, None]          # (B, S)
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    m = s.max(axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = p.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p / jnp.maximum(l, 1e-30),
+                     v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
 # Causal depthwise conv (Mamba front conv)
 # ---------------------------------------------------------------------------
 

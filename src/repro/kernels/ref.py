@@ -132,6 +132,40 @@ def paged_decode_attention(
 
 
 # ---------------------------------------------------------------------------
+# Paged cross attention (query block vs a paged encoder-output cache)
+# ---------------------------------------------------------------------------
+
+
+def paged_cross_attention(
+    q: jax.Array,           # (B, C, H, D) — C query positions per sequence
+    k_pages: jax.Array,     # (n_pages, P, K, D) — shared page pool
+    v_pages: jax.Array,     # (n_pages, P, K, D)
+    page_table: jax.Array,  # (B, max_pages) int32 — physical page ids
+    lengths: jax.Array,     # (B,) int32 — valid cross positions per sequence
+    *,
+    scale: float | None = None,
+) -> jax.Array:
+    """Paged cross-attention oracle: every query position attends
+    *non-causally* over its sequence's paged cross (encoder-output) cache,
+    masked to ``lengths[b]`` valid positions — the fixed-size region an
+    enc-dec decoder reads at prefill (C = chunk) and decode (C = 1)."""
+    b, c, h, d = q.shape
+    n_pages, p, k_heads, _ = k_pages.shape
+    k = _expand_kv(k_pages[page_table].reshape(b, -1, k_heads, d), h)
+    v = _expand_kv(v_pages[page_table].reshape(b, -1, k_heads, d), h)
+    s = k.shape[1]
+    scale = scale if scale is not None else d ** -0.5
+    logits = jnp.einsum(
+        "bqhd,bkhd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale
+    mask = jnp.arange(s)[None, :] < lengths[:, None]          # (B, S)
+    logits = jnp.where(mask[:, None, None, :], logits, NEG_INF)
+    pr = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", pr, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
 # Mamba1 selective scan
 # ---------------------------------------------------------------------------
 

@@ -8,6 +8,11 @@ GELU MLPs, tied unembedding — is implemented fully.
 
 Decode shapes lower the *decoder* step: self-attention KV cache of
 ``seq_len`` plus the fixed cross-attention KV computed at prefill.
+
+Paged serving: the decoder self-attention cache pages like any dense
+family, while the cross-attention K/V lives in a separate refcounted
+"encoder output" page region filled once per request by
+``prefill_cross`` (see the serving engine for sharing/spill semantics).
 """
 
 from __future__ import annotations
@@ -139,6 +144,12 @@ def prefill_fn(params, batch, cfg: ModelConfig):
     cache = {
         "self_k": self_k, "self_v": self_v,
         "cross_k": cross_k, "cross_v": cross_v,
+        # true encoder length: the cross cache may later be zero-padded up
+        # to ENC_SEQ (slot scatter), and decode must not attend the pad
+        "enc_len": jnp.full(
+            (1, batch["frames"].shape[0], 1), batch["frames"].shape[1],
+            jnp.int32,
+        ),
     }
     return logits, cache
 
@@ -147,6 +158,10 @@ def decode_fn(params, cache, batch, cfg: ModelConfig):
     positions = batch["positions"]
     x = ll.embed_lookup(params, batch["tokens"])
     x = x + ll.cast(params["dec_pos"])[positions][:, None]
+    # mask cross attention to the *true* encoder length — the cache's seq
+    # dim is zero-padded up to ENC_SEQ after slot scatter, and attending
+    # the pad rows (zero keys, logit 0) would dilute the real scores
+    enc_len = cache["enc_len"][0, :, 0]
 
     def body(carry, xs):
         lp, sk, sv, ck, cv = xs
@@ -154,7 +169,6 @@ def decode_fn(params, cache, batch, cfg: ModelConfig):
         a, sk, sv = ll.attn_decode(lp["self_attn"], h, cfg, positions, sk, sv)
         y = carry + a
         h = ops.rmsnorm(y, lp["cross_attn"]["ln"], cfg.norm_eps)
-        enc_len = jnp.full((h.shape[0],), ck.shape[1], jnp.int32)
         a, _, _ = ll.attn_decode(
             lp["cross_attn"], h, cfg, enc_len - 1, ck, cv, update_cache=False
         )
@@ -173,6 +187,7 @@ def decode_fn(params, cache, batch, cfg: ModelConfig):
     return logits, {
         "self_k": sk, "self_v": sv,
         "cross_k": cache["cross_k"], "cross_v": cache["cross_v"],
+        "enc_len": cache["enc_len"],
     }
 
 
@@ -184,7 +199,139 @@ def cache_specs(cfg: ModelConfig, batch: int, max_seq: int) -> dict:
         "self_v": PSpec((L, batch, max_seq, K, dh), axes, init="zeros"),
         "cross_k": PSpec((L, batch, ENC_SEQ, K, dh), axes, init="zeros"),
         "cross_v": PSpec((L, batch, ENC_SEQ, K, dh), axes, init="zeros"),
+        "enc_len": PSpec((1, batch, 1), ("null", "batch", "null_i32"),
+                         init="zeros"),
     }
+
+
+# ---------------------------------------------------------------------------
+# Paged serving path: the decoder self-attention cache pages like any dense
+# family; the cross-attention K/V — derived once per request from the
+# encoder output — lives in its own refcounted page chain (the "encoder
+# output region"), written by ``prefill_cross`` at admission and read
+# read-only by every chunk/decode step through the cross page table.
+# ---------------------------------------------------------------------------
+
+
+def paged_cache_specs(cfg: ModelConfig, n_slots: int, n_pages: int,
+                      page_size: int) -> dict:
+    L, K, dh = cfg.n_layers, cfg.n_kv_heads, cfg.d_head
+    axes = ("layers", "pages", "page", "kv_heads", "head_dim")
+    return {
+        "self_k_pages": PSpec((L, n_pages, page_size, K, dh), axes,
+                              init="zeros"),
+        "self_v_pages": PSpec((L, n_pages, page_size, K, dh), axes,
+                              init="zeros"),
+    }
+
+
+def paged_cross_specs(cfg: ModelConfig, n_pages: int, page_size: int) -> dict:
+    L, K, dh = cfg.n_layers, cfg.n_kv_heads, cfg.d_head
+    axes = ("layers", "pages", "page", "kv_heads", "head_dim")
+    return {
+        "cross_k_pages": PSpec((L, n_pages, page_size, K, dh), axes,
+                               init="zeros"),
+        "cross_v_pages": PSpec((L, n_pages, page_size, K, dh), axes,
+                               init="zeros"),
+    }
+
+
+def prefill_cross_fn(params, cache, batch, cfg: ModelConfig):
+    """Run the encoder over ``batch["frames"]`` (1, S_enc, d) and scatter
+    the per-decoder-layer cross K/V into the pages named by
+    ``batch["cross_page_table"]`` (max_cross_pages,). Called once per
+    admission — the pages are read-only afterwards, which is what lets the
+    engine refcount-share one encoder region across requests with
+    identical frames (and spill its cold pages to a peer host)."""
+    frames = batch["frames"]
+    table = batch["cross_page_table"]
+    enc_out = encode(params, frames, cfg)
+    P = cache["cross_k_pages"].shape[2]
+    S = enc_out.shape[1]
+    pid = table[jnp.arange(S) // P]
+    off = jnp.arange(S) % P
+
+    def body(carry, xs):
+        lp, ckp, cvp = xs
+        k, v = _cross_kv(lp["cross_attn"], enc_out, cfg)   # (1, S, K, dh)
+        ckp = ckp.at[pid, off].set(k[0].astype(ckp.dtype))
+        cvp = cvp.at[pid, off].set(v[0].astype(cvp.dtype))
+        return carry, (ckp, cvp)
+
+    _, (ck, cv) = jax.lax.scan(
+        body, 0,
+        (params["dec_layers"], cache["cross_k_pages"],
+         cache["cross_v_pages"]),
+        unroll=tracing.scan_unroll(),
+    )
+    return {**cache, "cross_k_pages": ck, "cross_v_pages": cv}
+
+
+def prefill_chunk_fn(params, cache, batch, cfg: ModelConfig, *, offset: int):
+    """One decoder-prompt chunk at static ``offset``: self-attention K/V
+    goes straight into the slot's self pages; cross-attention reads the
+    already-written encoder pages through the cross table, masked to
+    ``cross_len`` valid positions."""
+    table = batch["page_table"]
+    cross_table = batch["cross_page_table"][None]          # (1, max_cp)
+    cross_len = batch["cross_len"][None]                   # (1,)
+    x = ll.embed_lookup(params, batch["tokens"])           # (1, C, d)
+    C = x.shape[1]
+    x = x + ll.cast(params["dec_pos"])[None, offset:offset + C]
+
+    def body(carry, xs):
+        lp, skp, svp, ckp, cvp = xs
+        h = ops.rmsnorm(carry, lp["self_attn"]["ln"], cfg.norm_eps)
+        a, skp, svp = ll.attn_prefill_chunk(lp["self_attn"], h, cfg, offset,
+                                            skp, svp, table)
+        y = carry + a
+        h = ops.rmsnorm(y, lp["cross_attn"]["ln"], cfg.norm_eps)
+        y = y + ll.attn_cross_paged(lp["cross_attn"], h, cfg,
+                                    ckp, cvp, cross_table, cross_len)
+        h = ops.rmsnorm(y, lp["mlp"]["ln"], cfg.norm_eps)
+        return y + ll.mlp_forward(lp["mlp"], h, cfg), (skp, svp)
+
+    x, (sk, sv) = jax.lax.scan(
+        body, x,
+        (params["dec_layers"], cache["self_k_pages"], cache["self_v_pages"],
+         cache["cross_k_pages"], cache["cross_v_pages"]),
+        unroll=tracing.scan_unroll(),
+    )
+    x = ops.rmsnorm(x, params["final_ln"], cfg.norm_eps)
+    last = jax.lax.dynamic_slice_in_dim(x, batch["valid"] - 1, 1, axis=1)
+    logits = ll.logits_last(params, last[:, 0], cfg)
+    return logits, {**cache, "self_k_pages": sk, "self_v_pages": sv}
+
+
+def decode_paged_fn(params, cache, batch, cfg: ModelConfig):
+    positions = batch["positions"]
+    table = batch["page_table"]
+    cross_table = batch["cross_page_table"]                # (B, max_cp)
+    cross_len = batch["cross_len"]                         # (B,)
+    x = ll.embed_lookup(params, batch["tokens"])
+    x = x + ll.cast(params["dec_pos"])[positions][:, None]
+
+    def body(carry, xs):
+        lp, skp, svp, ckp, cvp = xs
+        h = ops.rmsnorm(carry, lp["self_attn"]["ln"], cfg.norm_eps)
+        a, skp, svp = ll.attn_decode_paged(lp["self_attn"], h, cfg,
+                                           positions, skp, svp, table)
+        y = carry + a
+        h = ops.rmsnorm(y, lp["cross_attn"]["ln"], cfg.norm_eps)
+        y = y + ll.attn_cross_paged(lp["cross_attn"], h, cfg, ckp, cvp,
+                                    cross_table, cross_len)
+        h = ops.rmsnorm(y, lp["mlp"]["ln"], cfg.norm_eps)
+        return y + ll.mlp_forward(lp["mlp"], h, cfg), (skp, svp)
+
+    x, (sk, sv) = jax.lax.scan(
+        body, x,
+        (params["dec_layers"], cache["self_k_pages"], cache["self_v_pages"],
+         cache["cross_k_pages"], cache["cross_v_pages"]),
+        unroll=tracing.scan_unroll(),
+    )
+    x = ops.rmsnorm(x, params["final_ln"], cfg.norm_eps)
+    logits = ll.logits_last(params, x[:, 0], cfg)
+    return logits, {**cache, "self_k_pages": sk, "self_v_pages": sv}
 
 
 def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
@@ -209,6 +356,10 @@ def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
 
 
 def make_model(cfg: ModelConfig) -> ModelFns:
+    # The whole per-token decoder cache lives in page pools
+    # (paged_state=False), so decoder prompt prefixes are COW-shareable —
+    # the engine salts their trie keys with the frames digest, since the
+    # prompt K/V depends on the encoder input through cross-attention.
     return ModelFns(
         cfg=cfg,
         param_specs=build_specs(cfg),
@@ -217,4 +368,9 @@ def make_model(cfg: ModelConfig) -> ModelFns:
         prefill=functools.partial(prefill_fn, cfg=cfg),
         decode_step=functools.partial(decode_fn, cfg=cfg),
         input_specs=functools.partial(input_specs, cfg),
+        paged_cache_specs=functools.partial(paged_cache_specs, cfg),
+        prefill_chunk=functools.partial(prefill_chunk_fn, cfg=cfg),
+        decode_paged=functools.partial(decode_paged_fn, cfg=cfg),
+        paged_cross_specs=functools.partial(paged_cross_specs, cfg),
+        prefill_cross=functools.partial(prefill_cross_fn, cfg=cfg),
     )

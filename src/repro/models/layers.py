@@ -232,6 +232,32 @@ def attn_prefill_chunk(
     return out, k_pages, v_pages
 
 
+def attn_cross_paged(
+    p: dict,
+    x: jax.Array,            # (B, C, d) — already normalized decoder input
+    cfg: ModelConfig,
+    k_pages: jax.Array,      # (n_pages, P, K, dh) — encoder-output pool
+    v_pages: jax.Array,
+    cross_table: jax.Array,  # (B, max_cross_pages)
+    cross_len: jax.Array,    # (B,) — valid encoder positions per sequence
+) -> jax.Array:
+    """Cross-attention of a decoder block against the paged encoder-output
+    region. Read-only: the cross K/V was written once at admission by the
+    family's ``prefill_cross``, so unlike self-attention there is no cache
+    update here — shared (refcounted) encoder pages stay intact.
+
+    No RoPE: the encoder keys written by ``prefill_cross`` are unrotated
+    (``_cross_kv``), so rotating the query would skew scores by the
+    decoder position — cross attention is position-free on both sides."""
+    q = jnp.einsum("bsd,dhk->bshk", x, cast(p["wq"]))
+    if cfg.qk_norm:
+        q = ops.rmsnorm(q, p["q_norm"], cfg.norm_eps)
+    out = ops.paged_cross_attention(q, k_pages, v_pages, cross_table,
+                                    cross_len)
+    out = jnp.einsum("bshk,hkd->bsd", out, cast(p["wo"]))
+    return out
+
+
 # ---------------------------------------------------------------------------
 # MLPs
 # ---------------------------------------------------------------------------

@@ -129,6 +129,26 @@ class ModelFns:
     ] | None = None
     paged_state: bool = False
 
+    # paged cross-attention region (enc-dec families). The cross K/V —
+    # derived once per request from the encoder output — lives in its own
+    # refcounted page chain rather than a dense (n_slots, ENC_SEQ) block:
+    # - paged_cross_specs(n_pages, page_size) -> dict of PSpec — extra
+    #   ``*_pages`` leaves merged into the paged cache, addressed by the
+    #   engine's per-slot *cross* page table;
+    # - prefill_cross(params, cache, batch) -> cache — run the encoder over
+    #   batch["frames"] (1, S_enc, d) and scatter the per-layer cross K/V
+    #   into the pages named by batch["cross_page_table"] (max_cross_pages,).
+    # With both set, prefill_chunk/decode_paged additionally receive
+    # cross_page_table + cross_len in their batch.
+    paged_cross_specs: Callable[..., Pytree] | None = None
+    prefill_cross: Callable[[Pytree, Pytree, dict], Pytree] | None = None
+
+    # True when prefill_chunk consumes modality embeddings *inline* (VLM):
+    # the batch carries an extra ``embeds`` leaf (1, C, feat) and a static
+    # ``mm_len`` kwarg — positions below mm_len read projected embeddings,
+    # positions at or above it read token embeddings.
+    paged_mm_inline: bool = False
+
     def init(self, rng: jax.Array, dtype=jnp.float32) -> Pytree:
         return init_from_specs(self.param_specs, rng, dtype)
 
@@ -171,12 +191,34 @@ class ModelFns:
     def supports_prefix_sharing(self) -> bool:
         """True when the whole per-token cache lives in shared page pools,
         so a cached prompt prefix can be installed into another slot's
-        page table with zero recompute (attention-only families)."""
+        page table with zero recompute. Families with ``paged_state=True``
+        (SSM/hybrid recurrent state, which is not page-addressable) are
+        excluded: for them the engine keeps trie bookkeeping only and
+        never skips prefill."""
         return self.supports_paged and not self.paged_state
+
+    @property
+    def supports_paged_cross(self) -> bool:
+        """True when the family pages its cross-attention region (enc-dec):
+        the engine then allocates a per-request cross page chain at
+        admission and runs :attr:`prefill_cross` to fill it."""
+        return (
+            self.supports_paged
+            and self.paged_cross_specs is not None
+            and self.prefill_cross is not None
+        )
+
+    def _full_paged_specs(self, n_slots: int, n_pages: int,
+                          page_size: int) -> Pytree:
+        """Paged cache specs with the cross-attention region merged in."""
+        specs = dict(self.paged_cache_specs(n_slots, n_pages, page_size))
+        if self.paged_cross_specs is not None:
+            specs.update(self.paged_cross_specs(n_pages, page_size))
+        return specs
 
     def init_paged_cache(self, n_slots: int, n_pages: int, page_size: int,
                          dtype=jnp.bfloat16) -> Pytree:
-        specs = self.paged_cache_specs(n_slots, n_pages, page_size)
+        specs = self._full_paged_specs(n_slots, n_pages, page_size)
         return jax.tree.map(
             lambda s: jnp.zeros(s.shape, _cache_dtype(s, dtype)),
             specs,
@@ -185,12 +227,12 @@ class ModelFns:
 
     def paged_cache_axes(self, n_slots: int, n_pages: int,
                          page_size: int) -> Pytree:
-        return axes_from_specs(self.paged_cache_specs(n_slots, n_pages,
+        return axes_from_specs(self._full_paged_specs(n_slots, n_pages,
                                                       page_size))
 
     def abstract_paged_cache(self, n_slots: int, n_pages: int, page_size: int,
                              dtype=jnp.bfloat16) -> Pytree:
-        specs = self.paged_cache_specs(n_slots, n_pages, page_size)
+        specs = self._full_paged_specs(n_slots, n_pages, page_size)
         return jax.tree.map(
             lambda s: jax.ShapeDtypeStruct(s.shape, _cache_dtype(s, dtype)),
             specs,

@@ -183,12 +183,26 @@ def paged_cache_specs(cfg: ModelConfig, n_slots: int, n_pages: int,
     }
 
 
-def prefill_chunk_fn(params, cache, batch, cfg: ModelConfig, *, offset: int):
+def prefill_chunk_fn(params, cache, batch, cfg: ModelConfig, *, offset: int,
+                     mm_len: int = 0):
     """One prompt chunk at static absolute position ``offset``: K/V written
     directly into the slot's pages, logits taken at the true final token
-    (``valid - 1`` within the chunk) — no bucket padding, no right-align."""
+    (``valid - 1`` within the chunk) — no bucket padding, no right-align.
+
+    VLM prompts chunk their modality embeddings inline: positions below
+    the static ``mm_len`` read projected image embeddings from
+    ``batch["embeds"]`` (1, C, VISION_D, rows aligned with the chunk)
+    instead of token embeddings, so image tokens ride the same pages,
+    chunk loop, and prefix-sharing trie as text."""
     table = batch["page_table"]
     x = ll.embed_lookup(params, batch["tokens"])          # (1, C, d)
+    si = min(max(mm_len - offset, 0), x.shape[1])  # static image/text split
+    if si:
+        img = jnp.einsum(
+            "bsv,vd->bsd", ll.cast(batch["embeds"][:, :si]),
+            ll.cast(params["mm_proj"]),
+        )
+        x = jnp.concatenate([img, x[:, si:]], axis=1)
 
     def body(carry, xs):
         lp, kp, vp = xs
@@ -255,12 +269,11 @@ def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
 
 
 def make_model(cfg: ModelConfig) -> ModelFns:
-    # VLM prefill interleaves image embeddings — not chunkable yet, so the
-    # paged serving path is only wired for the text-only dense families.
-    # Those families keep their whole per-token cache in page pools
-    # (paged_state=False), which makes them eligible for copy-on-write
-    # prefix sharing in the serving engine.
-    paged = cfg.family != "vlm"
+    # Dense and VLM both keep their whole per-token cache in page pools
+    # (paged_state=False), so both are eligible for copy-on-write prefix
+    # sharing. VLM prompts chunk their image embeddings inline through
+    # ``prefill_chunk`` (paged_mm_inline): image positions occupy ordinary
+    # pages and share like text pages.
     return ModelFns(
         cfg=cfg,
         param_specs=build_specs(cfg),
@@ -269,13 +282,8 @@ def make_model(cfg: ModelConfig) -> ModelFns:
         prefill=functools.partial(prefill_fn, cfg=cfg),
         decode_step=functools.partial(decode_fn, cfg=cfg),
         input_specs=functools.partial(input_specs, cfg),
-        paged_cache_specs=(
-            functools.partial(paged_cache_specs, cfg) if paged else None
-        ),
-        prefill_chunk=(
-            functools.partial(prefill_chunk_fn, cfg=cfg) if paged else None
-        ),
-        decode_paged=(
-            functools.partial(decode_paged_fn, cfg=cfg) if paged else None
-        ),
+        paged_cache_specs=functools.partial(paged_cache_specs, cfg),
+        prefill_chunk=functools.partial(prefill_chunk_fn, cfg=cfg),
+        decode_paged=functools.partial(decode_paged_fn, cfg=cfg),
+        paged_mm_inline=cfg.family == "vlm",
     )

@@ -44,9 +44,23 @@ without changing a single token. A peer's ``leave()`` (churn) revokes its
 leases: the recall misses, the stub's subtree is dropped, and the prefix
 is recomputed — never served stale.
 
+**Multimodal families**: all six families run paged by default. VLM
+prompts chunk their image embeddings *inline* — image rows occupy
+ordinary cache positions/pages, keyed in the trie by content-derived
+pseudo-tokens, so an identical image + shared text prefix hits the COW
+path like any text prefix. Enc-dec requests additionally carry a
+**cross-attention (encoder output) region**: a per-request page chain
+filled once at admission by the family's ``prefill_cross`` (the encoder
+runs exactly once per distinct input), refcounted so requests with
+identical frames share one region, LRU-evictable and spillable to peer
+hosts like any retained prefix page. Decoder-prompt prefix keys are
+salted with the frames digest — the prompt K/V depends on the encoder
+input through cross-attention, so identical text under different audio
+never falsely shares pages.
+
 The legacy dense path (``paged=False``) keeps the original
-``(n_slots, max_seq)`` cache with bucket-padded prefill — still used by
-families without paged support (enc-dec, VLM).
+``(n_slots, max_seq)`` cache with bucket-padded prefill — retained as
+the parity oracle and for engines that opt out of paging.
 
 Greedy sampling keeps runs deterministic — a restored engine replays
 identically, which is what lets the ad hoc cloud's continuity protocol
@@ -61,6 +75,7 @@ from __future__ import annotations
 
 import base64
 import json
+import zlib
 from dataclasses import dataclass, field
 from typing import Any
 
@@ -86,6 +101,23 @@ from repro.serving.kvcache import (
 
 Pytree = Any
 
+# Trie key namespaces for multimodal content. Text token ids are < 2^32
+# and salted/digest-mixed keys stay < 2^70, so pseudo-tokens derived from
+# modality bytes can never collide with (or be spoofed by) a text prompt,
+# and the three key kinds can never collide with each other.
+_MM_NS = 1 << 70                    # vlm image-embedding rows
+_CROSS_NS = 2 << 70                 # enc-dec encoder-frame rows
+_CROSS_PAD = 1 << 33                # cross-key pad sentinel (crc32 < 2^32)
+_SALT_SHIFT = 34                    # frames-digest salt for enc-dec keys
+
+
+def _content_keys(arr) -> list[int]:
+    """One deterministic pseudo-token per modality row (image patch /
+    audio frame): a CRC of the raw bytes, stable across processes so a
+    restored engine's trie keys keep matching."""
+    a = np.ascontiguousarray(np.asarray(arr))
+    return [zlib.crc32(r.tobytes()) for r in a.reshape(-1, a.shape[-1])]
+
 
 @dataclass
 class Request:
@@ -97,6 +129,9 @@ class Request:
     generated: list[int] = field(default_factory=list)
     slot: int | None = None
     done: bool = False
+    # memo for derived trie keys / modality lengths (pure functions of the
+    # immutable prompt+extra): not snapshotted, recomputed after restore
+    key_cache: dict = field(default_factory=dict, repr=False)
 
     @property
     def text_len(self) -> int:
@@ -146,11 +181,11 @@ def _copy_pages(cache: Pytree, src: jax.Array, dst: jax.Array) -> Pytree:
 
 def _install_page(cache: Pytree, dst: jax.Array, vals: Pytree) -> Pytree:
     """Recall: write a lent page's deserialized payload into physical page
-    ``dst`` of every paged leaf (the inverse of
-    :func:`~repro.serving.kvcache.extract_page_payload`)."""
+    ``dst`` of the paged leaves it carries (the inverse of
+    :func:`~repro.serving.kvcache.extract_page_payload` — region-split
+    payloads only hold one region's leaves)."""
     return {
-        k: (v.at[:, dst].set(vals[k].astype(v.dtype)) if k.endswith("_pages")
-            else v)
+        k: (v.at[:, dst].set(vals[k].astype(v.dtype)) if k in vals else v)
         for k, v in cache.items()
     }
 
@@ -163,6 +198,7 @@ class ServeEngine:
         *,
         n_slots: int = 8,
         max_seq: int = 1024,
+        max_cross_seq: int | None = None,
         cache_dtype=jnp.bfloat16,
         paged: bool | None = None,
         page_size: int = 64,
@@ -185,6 +221,11 @@ class ServeEngine:
                 "use paged=False"
             )
         self.paged = paged
+        # multimodal capabilities (orthogonal to paged): inline modality
+        # embeddings in the prompt (vlm) / a paged cross-attention region
+        # written once per request by the encoder (enc-dec)
+        self._mm = getattr(model, "paged_mm_inline", False)
+        self.cross = paged and model.supports_paged_cross
         self.lengths = np.zeros((n_slots,), np.int32)
         self.last_token = np.zeros((n_slots,), np.int32)
         self.slot_req: list[int | None] = [None] * n_slots
@@ -208,20 +249,40 @@ class ServeEngine:
             # high-water mark of pages whose content is resident locally
             # (live + free-but-cached) — what spilling actually shrinks
             "peak_resident_pages": 0,
+            # cross-attention (encoder output) region, enc-dec only
+            "cross_regions_computed": 0,  # encoder runs at admission
+            "cross_regions_shared": 0,    # regions served from cached pages
+            "cross_pages_shared": 0,      # pages those shared regions cover
         }
 
         if paged:
             self.page_size = page_size
             self.max_pages = -(-max_seq // page_size)
+            # cross-attention region capacity (enc-dec): pages per slot for
+            # the encoder output, on top of the decoder self-attn pages
+            self.max_cross_seq = (
+                (max_cross_seq if max_cross_seq is not None else max_seq)
+                if self.cross else 0
+            )
+            self.max_cross_pages = -(-self.max_cross_seq // page_size)
             # default pool: full capacity (one spare page for scratch);
             # pass a smaller n_pages to oversubscribe slots against the pool
             self.n_pages = (
                 n_pages if n_pages is not None
-                else n_slots * self.max_pages + 1
+                else n_slots * (self.max_pages + self.max_cross_pages) + 1
             )
             self.pool = PagePool(self.n_pages)
             self.page_table = np.zeros((n_slots, self.max_pages), np.int32)
             self.slot_pages: list[list[int]] = [[] for _ in range(n_slots)]
+            if self.cross:
+                self.cross_table = np.zeros(
+                    (n_slots, self.max_cross_pages), np.int32
+                )
+                self.cross_len = np.zeros((n_slots,), np.int32)
+                self.slot_cross_pages: list[list[int]] = [
+                    [] for _ in range(n_slots)
+                ]
+                self._prefill_cross = jax.jit(model.prefill_cross)
             self.prefill_chunk = min(prefill_chunk,
                                      self.max_pages * page_size)
             # prefix sharing: on by default; families with recurrent state
@@ -246,7 +307,10 @@ class ServeEngine:
                                           page_size, cache_dtype)
             self._decode_paged = jax.jit(model.decode_paged)
             self._prefill_chunk = jax.jit(
-                model.prefill_chunk, static_argnames=("offset",)
+                model.prefill_chunk,
+                static_argnames=(
+                    ("offset", "mm_len") if self._mm else ("offset",)
+                ),
             )
             # donate the cache: COW duplicates one page in place instead
             # of materializing a second copy of every page pool
@@ -263,24 +327,112 @@ class ServeEngine:
             self._decode = jax.jit(model.decode_step)
             self._scatter = jax.jit(scatter_slot)
 
+    # --------------------------------------------------------- multimodal
+    def _mm_len(self, req: Request) -> int:
+        """Cache positions occupied by inline modality embeddings (vlm
+        image rows) ahead of the text prompt; 0 for text-only families."""
+        if self._mm and "embeds" in req.extra:
+            if "mm_len" not in req.key_cache:
+                req.key_cache["mm_len"] = int(
+                    np.asarray(req.extra["embeds"]).shape[-2]
+                )
+            return req.key_cache["mm_len"]
+        return 0
+
+    def _total_len(self, req: Request) -> int:
+        return self._mm_len(req) + len(req.prompt)
+
+    def _frames_salt(self, req: Request) -> int:
+        """CRC of the request's whole frames payload: mixed into every
+        enc-dec trie key so regions/prompts only ever share on an exact
+        full-input match."""
+        if "salt" not in req.key_cache:
+            req.key_cache["salt"] = zlib.crc32(
+                np.ascontiguousarray(np.asarray(req.extra["frames"])).tobytes()
+            )
+        return req.key_cache["salt"]
+
+    def _key_tokens(self, req: Request) -> list[int]:
+        """Trie key sequence for the prompt pages. VLM image rows occupy
+        real cache positions, so their content pseudo-tokens are simply
+        prepended — an identical image + shared text prefix then walks the
+        trie like any text prefix. Enc-dec prompt K/V depends on the
+        encoder input through cross-attention, so the text tokens are
+        salted with the frames digest: identical transcripts of different
+        audio never falsely share pages. Memoized on the request (pure
+        function of the immutable prompt+extra) so queued requests are
+        not re-hashed on every admission scan."""
+        if "key_tokens" not in req.key_cache:
+            if self._mm and "embeds" in req.extra:
+                ks = [_MM_NS | c
+                      for c in _content_keys(req.extra["embeds"])] + req.prompt
+            elif self.cross and "frames" in req.extra:
+                salt = self._frames_salt(req)
+                ks = [t + ((salt + 1) << _SALT_SHIFT) for t in req.prompt]
+            else:
+                ks = list(req.prompt)
+            req.key_cache["key_tokens"] = ks
+        return req.key_cache["key_tokens"]
+
+    def _cross_keys(self, req: Request) -> list[int]:
+        """Trie key sequence for the encoder-output region: one content
+        pseudo-token per frame, padded to a page multiple with a sentinel
+        so the whole region maps to full trie blocks. Every key mixes in
+        the *whole-frames* digest: the encoder is non-causal, so a region
+        is only reusable on an exact full-input match — without the
+        digest, frames that are a page-aligned prefix of a longer cached
+        input would produce a false "full-chain" hit."""
+        if "cross_keys" not in req.key_cache:
+            ns = _CROSS_NS | (self._frames_salt(req) << _SALT_SHIFT)
+            ks = [ns | c for c in _content_keys(req.extra["frames"])]
+            pad = -len(ks) % self.page_size
+            req.key_cache["cross_keys"] = ks + [ns | _CROSS_PAD] * pad
+        return req.key_cache["cross_keys"]
+
+    def _n_frames(self, req: Request) -> int:
+        if "n_frames" not in req.key_cache:
+            req.key_cache["n_frames"] = int(
+                np.asarray(req.extra["frames"]).shape[-2]
+            )
+        return req.key_cache["n_frames"]
+
     # ------------------------------------------------------------- interface
     def submit(self, prompt: list[int], *, max_new_tokens: int = 16,
                eos_id: int | None = None, extra: dict | None = None) -> Request:
         extra = dict(extra or {})
-        if not 1 <= len(prompt) < self.max_seq:
+        probe = Request(-1, list(prompt), max_new_tokens, eos_id, extra)
+        allowed = ({"embeds"} if self._mm else set()) | (
+            {"frames"} if self.cross else set()
+        )
+        if self.paged and set(extra) - allowed:
             raise ValueError(
-                f"prompt length {len(prompt)} outside [1, {self.max_seq})"
+                f"unsupported modality extras {sorted(set(extra) - allowed)} "
+                "for this family's paged path; construct the engine with "
+                "paged=False"
+            )
+        if self._mm and "embeds" not in extra:
+            raise ValueError("vlm requests need extra={'embeds': ...}")
+        if self.cross and "frames" not in extra:
+            raise ValueError("enc-dec requests need extra={'frames': ...}")
+        tlen = self._total_len(probe)
+        if not 1 <= len(prompt) or not tlen < self.max_seq:
+            raise ValueError(
+                f"prompt length {len(prompt)} (+{tlen - len(prompt)} "
+                f"modality positions) outside [1, {self.max_seq})"
             )
         if self.paged:
-            if extra:
-                raise ValueError(
-                    "modality extras are not supported by chunked prefill "
-                    "yet; construct the engine with paged=False"
-                )
             need = pages_needed(
-                min(len(prompt) + max_new_tokens, self.max_seq),
-                self.page_size,
+                min(tlen + max_new_tokens, self.max_seq), self.page_size
             )
+            if self.cross:
+                n_cp = pages_needed(self._n_frames(probe), self.page_size)
+                if (n_cp > self.max_cross_pages
+                        or self._n_frames(probe) > self.max_cross_seq):
+                    raise ValueError(
+                        f"{self._n_frames(probe)} frames exceed "
+                        f"max_cross_seq={self.max_cross_seq}"
+                    )
+                need += n_cp
             if need > self.n_pages - 1:
                 raise ValueError(
                     f"request needs {need} pages but the pool only has "
@@ -339,6 +491,9 @@ class ServeEngine:
                 "positions": positions,
                 "page_table": jnp.asarray(self.page_table),
             }
+            if self.cross:
+                batch["cross_page_table"] = jnp.asarray(self.cross_table)
+                batch["cross_len"] = jnp.asarray(self.cross_len)
             logits, self.cache = self._decode_paged(self.params, self.cache,
                                                     batch)
         else:
@@ -405,33 +560,45 @@ class ServeEngine:
     def _try_admit_paged(self, slot: int, req: Request, *,
                          require_shared: bool = False) -> bool:
         """Plan + execute one paged admission: trie lookup, batched recall
-        of spilled prefix pages, refcount bumps on the shared prefix
+        of spilled prefix/encoder pages, refcount bumps on the shared
         pages, private allocation for the rest.
 
+        Enc-dec requests also plan their **encoder-output region** here:
+        a full-chain trie hit on the frames' content keys shares the
+        cached cross pages (the encoder is skipped entirely); otherwise
+        fresh pages are allocated and ``prefill_cross`` fills them. Cross
+        stubs recall through the same budget-bounded path as prefix
+        stubs.
+
         Returns False (no *local* side effects) if the pool cannot satisfy
-        it, or if ``require_shared`` and no resident cached prefix shrinks
+        it, or if ``require_shared`` and no resident cached pages shrink
         the request. The plan loop re-plans after a recall miss (a peer
         churned away mid-recall): the missed stub's subtree is dropped and
-        the prefix recomputed — churn degrades to recompute, never to
-        wrong tokens. Payloads already recalled by an attempt that then
-        fails are re-lent (or, failing that, evicted), so no cached page
-        is silently lost.
+        the prefix (or encoder region) recomputed — churn degrades to
+        recompute, never to wrong tokens. Payloads already recalled by an
+        attempt that then fails are re-lent (or, failing that, evicted),
+        so no cached page is silently lost.
         """
-        plen = len(req.prompt)
+        tlen = self._total_len(req)
         P = self.page_size
-        need = pages_needed(min(plen + req.max_new_tokens, self.max_seq), P)
+        need = pages_needed(min(tlen + req.max_new_tokens, self.max_seq), P)
+        key_tokens = self._key_tokens(req)
+        cross_keys = self._cross_keys(req) if self.cross else []
+        n_cp = len(cross_keys) // P
         payloads: dict[int, bytes] = {}  # stub id -> recalled page bytes
         wait_s = 0.0
         allow_spill = self.spill
         while True:
             matched, shared, recalls, would_be = 0, [], [], 0
+            cross_shared: list[int] = []
+            cross_recalls: list[int] = []
+            budget = self.recall_budget - len(payloads)
             if self.prefix_cache:
-                chain = self.prefix_index.lookup(req.prompt)
+                chain = self.prefix_index.lookup(key_tokens)
                 # usable prefix: resident pages, plus spilled stubs within
                 # the per-request recall budget; truncated at the first
                 # stub the budget (or a disabled spill tier) cannot cover
                 usable: list[int] = []
-                budget = self.recall_budget - len(payloads)
                 for sid in chain:
                     if sid < self.n_pages:
                         usable.append(sid)
@@ -442,36 +609,65 @@ class ServeEngine:
                             budget -= 1
                     else:
                         break
-                # cap at plen-1: at least one suffix token must run
+                # cap at tlen-1: at least one suffix token must run
                 # through the model to produce the first-token logits
-                matched = min(len(usable) * P, plen - 1)
+                matched = min(len(usable) * P, tlen - 1)
                 if not self.prefix_share:
                     # recurrent state is not page-addressable: trie tracks
                     # would-be hits only, prefill is never skipped
-                    would_be = min(len(chain) * P, plen - 1)
+                    would_be = min(len(chain) * P, tlen - 1)
                     matched = 0
                 elif matched:
                     shared = usable[: pages_needed(matched, P)]
                     recalls = [s for s in shared if s >= self.n_pages]
+                # encoder-output region: reusable only on a full-chain hit
+                # (the encoder is non-causal — a prefix of its output is
+                # not a function of a prefix of its input)
+                if self.prefix_share and n_cp:
+                    cchain = self.prefix_index.lookup(cross_keys)
+                    tentative: list[int] | None = (
+                        [] if len(cchain) == n_cp else None
+                    )
+                    used = 0
+                    for sid in cchain if tentative is not None else []:
+                        if sid < self.n_pages:
+                            tentative.append(sid)
+                        elif (allow_spill and sid in self.spilled
+                              and (sid in payloads or budget - used > 0)):
+                            tentative.append(sid)
+                            if sid not in payloads:
+                                used += 1
+                        else:
+                            tentative = None
+                            break
+                    if tentative is not None:
+                        cross_shared = tentative
+                        cross_recalls = [s for s in cross_shared
+                                         if s >= self.n_pages]
             resident = [s for s in shared if s < self.n_pages]
-            if require_shared and not resident:
+            cross_resident = [s for s in cross_shared if s < self.n_pages]
+            if require_shared and not (resident or cross_resident):
                 self._abort_recalls(payloads)
                 return False
             # feasibility pre-check so failure has no local side effects:
             # share() will pull revived (refcount-0) pages out of the free
-            # list, alloc() needs the private pages on top of that, and
-            # every recalled page needs a fresh local page too
-            revive = sum(1 for p in resident if self.pool.refcount(p) == 0)
+            # list, alloc() needs the private (and freshly computed cross)
+            # pages on top of that, and every recalled page needs a fresh
+            # local page too
+            revive = sum(1 for p in resident + cross_resident
+                         if self.pool.refcount(p) == 0)
+            cross_new = n_cp if (self.cross and not cross_shared) else 0
             if (need - matched // P) + len(recalls) + revive \
-                    > self.pool.available:
-                if recalls:
+                    + cross_new + len(cross_recalls) > self.pool.available:
+                if recalls or cross_recalls:
                     # recalling won't fit: retry using only the resident
-                    # prefix (the stubs stay spilled for a later hit)
+                    # pages (the stubs stay spilled for a later hit)
                     allow_spill = False
                     continue
                 self._abort_recalls(payloads)
                 return False
-            missing = [s for s in recalls if s not in payloads]
+            missing = [s for s in recalls + cross_recalls
+                       if s not in payloads]
             if missing:
                 got, w = self.remote_pool.recall(
                     [self.spilled[s].lease_id for s in missing]
@@ -496,19 +692,24 @@ class ServeEngine:
         # recalled payloads the final plan cannot use (a later re-plan
         # shrank the usable prefix): re-lend them so they stay cached
         unused = {s: payloads.pop(s) for s in list(payloads)
-                  if s not in recalls}
+                  if s not in recalls and s not in cross_recalls}
         if unused:
             self._abort_recalls(unused)
         # ---- execute: guaranteed to succeed from here ----
-        self.pool.share(resident)  # revive cached pages before alloc
+        self.pool.share(resident)        # revive cached pages before alloc
+        self.pool.share(cross_resident)
         hold = (int(np.ceil(wait_s / self.decode_step_s))
                 if wait_s > 0 else 0)
-        if recalls:
-            local = self.pool.alloc(len(recalls))
+        all_recalls = recalls + cross_recalls
+        if all_recalls:
+            local = self.pool.alloc(len(all_recalls))
             assert local is not None  # guaranteed by the pre-check
             self._retire_cached(local)
-            like = page_payload_like(self.cache)
-            for sid, page in zip(recalls, local):
+            for sid, page in zip(all_recalls, local):
+                like = page_payload_like(
+                    self.cache,
+                    self._region_keys(cross=sid in cross_recalls),
+                )
                 vals = deserialize_tree(payloads.pop(sid), like)
                 self.cache = self._install_page(
                     self.cache, jnp.asarray(page, jnp.int32),
@@ -516,21 +717,51 @@ class ServeEngine:
                 )
                 self.prefix_index.remap(sid, page)
                 del self.spilled[sid]
-                shared[shared.index(sid)] = page
-            self.stats["pages_recalled"] += len(recalls)
+                tgt = shared if sid in shared else cross_shared
+                tgt[tgt.index(sid)] = page
+            self.stats["pages_recalled"] += len(all_recalls)
         private = self.pool.alloc(need - matched // P)
         assert private is not None  # guaranteed by the pre-check
         self._retire_cached(private)
+        cross_chain: list[int] | None = None
+        cross_computed = False
+        if self.cross:
+            if cross_shared:
+                cross_chain = cross_shared
+                self.stats["cross_regions_shared"] += 1
+                self.stats["cross_pages_shared"] += len(cross_shared)
+            else:
+                cross_chain = self.pool.alloc(n_cp)
+                assert cross_chain is not None  # covered by the pre-check
+                self._retire_cached(cross_chain)
+                cross_computed = True
         if would_be:
             self.stats["prefix_hits"] += 1
             self.stats["prefix_hit_tokens"] += would_be
-        self._prefill_paged(slot, req, shared, private, matched)
+        self._prefill_paged(slot, req, shared, private, matched, key_tokens,
+                            cross_keys, cross_chain, cross_computed)
         if hold and self.slot_req[slot] == req.req_id:
             # recall-in-flight: scheduler holds this lane's decode for the
             # simulated transfer time (see step())
             self.slot_hold[slot] = hold
             self.stats["recall_hold_steps"] += hold
         return True
+
+    def _region_keys(self, *, cross: bool) -> frozenset[str] | None:
+        """Cache leaves one region's page payload must carry: cross pages
+        only the ``cross_*`` pools, prompt pages the rest. None (all
+        ``*_pages`` leaves) for families without a cross region."""
+        if not self.cross:
+            return None
+        names = {k for k in self.cache if k.endswith("_pages")}
+        cross_names = {k for k in names if k.startswith("cross_")}
+        return frozenset(cross_names if cross else names - cross_names)
+
+    def _node_is_cross(self, page: int) -> bool:
+        """A trie node belongs to the cross region iff its block keys
+        carry the cross namespace (block[0] ≥ ``_CROSS_NS``)."""
+        ent = self.prefix_index._nodes.get(page)
+        return bool(ent and ent[1] and ent[1][0] >= _CROSS_NS)
 
     def _retire_cached(self, pages: list[int]) -> None:
         """Freshly reallocated pages lose their cached contents: **spill**
@@ -544,7 +775,10 @@ class ServeEngine:
                 continue
             if self.spill:
                 lease = self.remote_pool.lend(
-                    extract_page_payload(self.cache, p)
+                    extract_page_payload(
+                        self.cache, p,
+                        self._region_keys(cross=self._node_is_cross(p)),
+                    )
                 )
                 if lease is not None:
                     sid = self._spill_next
@@ -588,6 +822,14 @@ class ServeEngine:
             self.pool.free(self.slot_pages[slot])
             self.slot_pages[slot] = []
             self.page_table[slot, :] = 0  # scratch page: inert lane writes
+            if self.cross:
+                # drop this slot's reference on the encoder region; the
+                # pages keep their contents in the free list, so a later
+                # request with the same frames revives them trie-first
+                self.pool.free(self.slot_cross_pages[slot])
+                self.slot_cross_pages[slot] = []
+                self.cross_table[slot, :] = 0
+                self.cross_len[slot] = 0
             self.slot_hold[slot] = 0
             self._admit_ready = True      # freed capacity: rescan the queue
 
@@ -604,15 +846,27 @@ class ServeEngine:
             self._release_slot(slot)
 
     def _prefill_paged(self, slot: int, req: Request, shared: list[int],
-                       private: list[int], matched: int) -> None:
+                       private: list[int], matched: int,
+                       key_tokens: list[int] | None = None,
+                       cross_keys: list[int] | None = None,
+                       cross_chain: list[int] | None = None,
+                       cross_computed: bool = False) -> None:
         """Chunked prefill of the uncached suffix at true prompt length:
         each chunk's K/V (or recurrent state) is written straight into the
         slot's private pages, while attention reads the shared prefix
         pages through the page table.
 
+        VLM prompts span ``mm_len`` image positions followed by the text
+        tokens: the chunk loop slices the request's image embeddings into
+        each chunk (``embeds`` + static ``mm_len``), so image rows land in
+        ordinary pages and the whole image+text prefix is shareable.
+        Enc-dec requests first install their encoder-output region
+        (``cross_chain``), running ``prefill_cross`` only when the region
+        was not served from cache.
+
         ``shared`` holds the trie-matched prefix pages (refcounts already
         bumped); ``matched`` is the token count they cover, page-aligned
-        except for a whole-prompt hit (capped at ``plen - 1``), where the
+        except for a whole-prompt hit (capped at ``tlen - 1``), where the
         final, partially-used shared page is **copied on write**: the slot
         gets a fresh page with the copied tail and recomputes only the
         last prompt token into it for the first-token logits.
@@ -623,7 +877,11 @@ class ServeEngine:
         already-compiled ``decode_paged`` instead of adding a
         per-prompt-length prefill variant."""
         plen = len(req.prompt)
-        assert plen >= 1 and plen < self.max_seq, plen
+        mm = self._mm_len(req)
+        tlen = mm + plen
+        assert plen >= 1 and tlen < self.max_seq, (plen, tlen)
+        if key_tokens is None:
+            key_tokens = self._key_tokens(req)
         P = self.page_size
         full = matched // P
         cow = bool(matched % P)
@@ -640,8 +898,26 @@ class ServeEngine:
         self.slot_pages[slot] = chain
         self.page_table[slot, :] = 0
         self.page_table[slot, : len(chain)] = chain
+        if self.cross:
+            # install the encoder-output region before any decoder compute
+            # (chunk prefill and the COW recompute both read it)
+            self.slot_cross_pages[slot] = list(cross_chain)
+            self.cross_table[slot, :] = 0
+            self.cross_table[slot, : len(cross_chain)] = cross_chain
+            self.cross_len[slot] = self._n_frames(req)
+            if cross_computed:
+                frames = np.asarray(req.extra["frames"])
+                if frames.ndim == 2:
+                    frames = frames[None]
+                self.cache = self._prefill_cross(self.params, self.cache, {
+                    "frames": jnp.asarray(frames),
+                    "cross_page_table": jnp.asarray(self.cross_table[slot]),
+                })
+                self.stats["cross_regions_computed"] += 1
+                if self.prefix_share:
+                    self.prefix_index.insert(cross_keys, cross_chain)
         if cow:
-            # whole-prompt hit: only token plen-1 needs recomputing. One
+            # whole-prompt hit: only token tlen-1 needs recomputing. One
             # synthetic decode_paged step writes its K/V into the COW'd
             # private page and returns the last-position logits. Other
             # lanes re-write the K/V the next real step writes anyway
@@ -650,34 +926,56 @@ class ServeEngine:
             toks = self.last_token.copy()
             toks[slot] = req.prompt[-1]
             pos = self.lengths.copy()
-            pos[slot] = plen - 1
+            pos[slot] = tlen - 1
             batch = {
                 "tokens": jnp.asarray(toks)[:, None],
                 "positions": jnp.asarray(pos),
                 "page_table": jnp.asarray(self.page_table),
             }
+            if self.cross:
+                batch["cross_page_table"] = jnp.asarray(self.cross_table)
+                batch["cross_len"] = jnp.asarray(self.cross_len)
             logits, self.cache = self._decode_paged(self.params, self.cache,
                                                     batch)
             first = int(np.asarray(jnp.argmax(logits[slot])))
         else:
             table_row = jnp.asarray(self.page_table[slot])
             C = self.prefill_chunk
+            embeds = (
+                np.asarray(req.extra["embeds"]).reshape(mm, -1) if mm
+                else None
+            )
             logits = None
-            for off in range(matched, plen, C):
-                part = req.prompt[off:off + C]
+            for off in range(matched, tlen, C):
+                n = min(C, tlen - off)
+                si = min(max(mm - off, 0), n)  # image rows in this chunk
                 toks = np.zeros((1, C), np.int32)
-                toks[0, : len(part)] = part
+                if si < n:
+                    toks[0, si:n] = req.prompt[off + si - mm: off + n - mm]
                 batch = {
                     "tokens": jnp.asarray(toks),
-                    "valid": jnp.asarray(len(part), jnp.int32),
+                    "valid": jnp.asarray(n, jnp.int32),
                     "slot": jnp.asarray(slot, jnp.int32),
                     "page_table": table_row,
                 }
+                kw: dict[str, int] = {"offset": off}
+                if self._mm:
+                    emb = np.zeros((1, C, embeds.shape[1]), embeds.dtype)
+                    if si:
+                        emb[0, :si] = embeds[off:off + si]
+                    batch["embeds"] = jnp.asarray(emb)
+                    kw["mm_len"] = mm
+                if self.cross:
+                    batch["cross_page_table"] = jnp.asarray(
+                        self.cross_table[slot]
+                    )
+                    batch["cross_len"] = jnp.asarray(self.cross_len[slot],
+                                                     jnp.int32)
                 logits, self.cache = self._prefill_chunk(
-                    self.params, self.cache, batch, offset=off
+                    self.params, self.cache, batch, **kw
                 )
             first = int(np.asarray(jnp.argmax(logits, axis=-1))[0])
-        self.stats["prefill_tokens"] += plen - matched
+        self.stats["prefill_tokens"] += tlen - matched
         self.stats["prefill_tokens_shared"] += matched
         if matched:
             self.stats["prefix_hits"] += 1
@@ -685,7 +983,7 @@ class ServeEngine:
         self.stats["peak_pages"] = max(self.stats["peak_pages"],
                                        self.pool.outstanding)
         if self.prefix_cache:
-            self._register_prefix(req.prompt, chain)
+            self._register_prefix(key_tokens, chain)
         # locally resident content = live pages + free-but-cached prefix
         # pages (what the spill tier moves to neighbor hosts)
         retained = sum(
@@ -696,29 +994,35 @@ class ServeEngine:
             self.stats["peak_resident_pages"],
             self.pool.outstanding + retained,
         )
-        self._finish_admit(slot, req, first, plen)
+        self._finish_admit(slot, req, first, tlen)
 
-    def _register_prefix(self, prompt: list[int], chain: list[int]) -> None:
+    def _register_prefix(self, tokens: list[int], chain: list[int]) -> None:
         """Index the full prompt pages of a freshly admitted request so
         later prompts can share them (or, for recurrent-state families,
-        so the trie can count would-be hits via phantom ids)."""
-        n = len(prompt) // self.page_size
+        so the trie can count would-be hits via phantom ids). ``tokens``
+        is the request's trie *key* sequence — the prompt, with modality
+        pseudo-tokens prepended (vlm) or a frames salt mixed in
+        (enc-dec); one key per cache position."""
+        n = len(tokens) // self.page_size
         if n == 0:
             return
         if self.prefix_share:
-            self.prefix_index.insert(prompt, chain[:n])
+            self.prefix_index.insert(tokens, chain[:n])
             return
         # bookkeeping-only trie: bound its growth, it holds no pages
         if len(self.prefix_index) > 8 * self.n_pages:
             return
         phantoms = list(range(self._phantom_next, self._phantom_next + n))
         self._phantom_next += n
-        self.prefix_index.insert(prompt, phantoms)
+        self.prefix_index.insert(tokens, phantoms)
 
     def _prefill_into(self, slot: int, req: Request) -> None:
         plen = len(req.prompt)
-        assert plen >= 1 and plen < self.max_seq, plen
-        bucket = min(_bucket(plen), self.max_seq)
+        mm = self._mm_len(req)
+        assert plen >= 1 and mm + plen < self.max_seq, (plen, mm)
+        # vlm: image rows occupy cache positions ahead of the text bucket,
+        # so the admitted length (= the decode position) includes them
+        bucket = min(_bucket(plen), self.max_seq - mm)
         toks = np.zeros((1, bucket), np.int32)
         toks[0, :plen] = req.prompt
         # right-align so position arithmetic matches an unpadded prompt
@@ -740,7 +1044,7 @@ class ServeEngine:
         # right-aligned bucketing
         row = logits[0, -1] if logits.ndim == 3 else logits[0]
         first = int(np.asarray(jnp.argmax(row)))
-        self._finish_admit(slot, req, first, bucket)
+        self._finish_admit(slot, req, first, mm + bucket)
 
     # -------------------------------------------------------------- snapshot
     def snapshot(self) -> bytes:
@@ -752,6 +1056,9 @@ class ServeEngine:
         }
         if self.paged:
             state["page_table"] = self.page_table
+            if self.cross:
+                state["cross_table"] = self.cross_table
+                state["cross_len"] = self.cross_len
         blob = serialize_tree(state)
         meta = {
             "paged": self.paged,
@@ -778,6 +1085,10 @@ class ServeEngine:
             meta["slot_pages"] = [
                 [int(p) for p in ps] for ps in self.slot_pages
             ]
+            if self.cross:
+                meta["slot_cross_pages"] = [
+                    [int(p) for p in ps] for ps in self.slot_cross_pages
+                ]
             # prefix sharing: refcounts + the trie must survive a restore
             # on a substitute host, or shared pages would double-free
             meta["page_ref"] = {str(p): r for p, r in pool_ref.items()}
@@ -813,6 +1124,9 @@ class ServeEngine:
             assert meta["page_size"] == self.page_size
             assert meta["n_pages"] == self.n_pages
             like["page_table"] = self.page_table
+            if self.cross:
+                like["cross_table"] = self.cross_table
+                like["cross_len"] = self.cross_len
         state = deserialize_tree(blob[4 + mlen :], like)
         self.cache = jax.tree.map(jnp.asarray, state["cache"])
         self.lengths = np.asarray(state["lengths"]).copy()
@@ -820,6 +1134,14 @@ class ServeEngine:
         self.steps = int(state["steps"])
         if self.paged:
             self.page_table = np.asarray(state["page_table"]).copy()
+            if self.cross:
+                self.cross_table = np.asarray(state["cross_table"]).copy()
+                self.cross_len = np.asarray(state["cross_len"]).copy()
+                self.slot_cross_pages = [
+                    [int(p) for p in ps]
+                    for ps in meta.get("slot_cross_pages",
+                                       [[] for _ in range(self.n_slots)])
+                ]
             # page_ref absent => legacy snapshot: every non-free page is
             # exclusively owned (refcount 1), which restore() infers
             self.pool.restore(meta["free_pages"], meta.get("page_ref"),

@@ -15,7 +15,14 @@ physical page 0 is reserved as a scratch page (inactive decode lanes point
 their table rows at it, so their batched writes land somewhere harmless),
 pages are handed out at admission (O(prompt pages), no full-cache copy)
 and returned when a request completes. O(1) recurrent state (SSM/conv)
-keeps its dense ``(n_slots, ...)`` layout.
+keeps its dense ``(n_slots, ...)`` layout. Enc-dec families add a
+**cross-attention (encoder output) region**: extra ``cross_*_pages``
+leaves (via ``paged_cross_specs``) addressed by a per-slot *cross* page
+table, allocated from the same pool, filled once per request by
+``prefill_cross``, and — because they are ordinary refcounted pages
+indexed in the prefix trie under content-derived keys — shared across
+requests with identical frames, LRU-evicted, and spilled/recalled
+exactly like prefix pages.
 
 **Prefix sharing** (copy-on-write): :class:`PagePool` refcounts pages, and
 :class:`PrefixIndex` is a trie mapping page-aligned token prefixes to the
@@ -315,6 +322,11 @@ class PrefixIndex:
     the engine) — the trie then only tracks would-be hits for stats; no
     pages are installed and prefill is not skipped.
 
+    "Tokens" are trie keys, not necessarily vocabulary ids: the engine
+    keys vlm image rows and enc-dec encoder frames by content-derived
+    pseudo-tokens (and salts enc-dec prompt tokens with the frames
+    digest), so multimodal pages share through the same trie walk.
+
     The index holds **no pool references**: a cached page whose owners all
     completed lives in the free list until reallocation, at which point
     the engine calls :meth:`evict_pages` and the node (plus its now
@@ -494,22 +506,34 @@ class SpilledPage:
     peer: str
 
 
-def extract_page_payload(cache: Pytree, page: int) -> bytes:
-    """Serialize physical page ``page``'s slice of every paged cache leaf
+def extract_page_payload(cache: Pytree, page: int,
+                         keys: frozenset[str] | set[str] | None = None,
+                         ) -> bytes:
+    """Serialize physical page ``page``'s slice of the paged cache leaves
     (``*_pages``, laid out ``(layers, n_pages, page_size, ...)``) into a
-    self-describing blob — the unit a host lends to a peer."""
+    self-describing blob — the unit a host lends to a peer.
+
+    ``keys`` restricts the payload to one region's leaves: a page serves
+    either the prompt region (``self_*``/``k_``/``v_`` pools) or the
+    enc-dec cross region (``cross_*`` pools), never both, so shipping
+    the unused half would double spill bandwidth and peer storage."""
     return serialize_tree({
         k: np.asarray(v[:, page])
-        for k, v in cache.items() if k.endswith("_pages")
+        for k, v in cache.items()
+        if k.endswith("_pages") and (keys is None or k in keys)
     })
 
 
-def page_payload_like(cache: Pytree) -> dict[str, np.ndarray]:
+def page_payload_like(cache: Pytree,
+                      keys: frozenset[str] | set[str] | None = None,
+                      ) -> dict[str, np.ndarray]:
     """Zero templates matching :func:`extract_page_payload` output —
-    the ``like`` tree a recall deserializes against."""
+    the ``like`` tree a recall deserializes against (extra keys in a
+    blob are ignored, so a full-payload legacy blob still recalls)."""
     return {
         k: np.zeros((v.shape[0],) + tuple(v.shape[2:]), np.dtype(v.dtype))
-        for k, v in cache.items() if k.endswith("_pages")
+        for k, v in cache.items()
+        if k.endswith("_pages") and (keys is None or k in keys)
     }
 
 

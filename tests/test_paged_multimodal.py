@@ -1,0 +1,394 @@
+"""Paged serving for the multimodal families (vlm, enc-dec).
+
+- ``paged_cross_attention`` vs the ref oracle on both kernel backends;
+- token-for-token parity of the paged engines against an exact unpadded
+  prefill + decode reference (and against the dense engine where its
+  bucketing is exact);
+- vlm prefix sharing on a shared image+text prefix — and *no* sharing
+  when the text matches but the image differs;
+- enc-dec cross-region sharing: one encoder run per distinct input,
+  frames-salted prompt keys so identical transcripts of different audio
+  never share decoder pages;
+- encoder-page spill/recall round-trip through a :class:`RemotePagePool`;
+- snapshot/restore mid-generation for both families.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import REDUCED
+from repro.core.cloudlet import CloudletRegistry
+from repro.kernels import ops, ref
+from repro.models import get_model
+from repro.serving.engine import ServeEngine
+from repro.serving.kvcache import RemotePagePool, expand_prefill_cache
+
+RNG = np.random.default_rng(11)
+VISION_D = 1024
+MAX_SEQ = 96
+
+
+@pytest.fixture(scope="module")
+def whisper():
+    cfg = REDUCED["whisper-medium"]
+    model = get_model(cfg)
+    params = model.init(jax.random.key(0))
+    return cfg, model, params
+
+
+@pytest.fixture(scope="module")
+def llava():
+    cfg = REDUCED["llava-next-mistral-7b"]
+    model = get_model(cfg)
+    params = model.init(jax.random.key(0))
+    return cfg, model, params
+
+
+def _tokens(cfg, n, seed):
+    return np.random.default_rng(seed).integers(1, cfg.vocab_size, n).tolist()
+
+
+def _frames(cfg, n, seed):
+    return np.random.default_rng(seed).standard_normal(
+        (1, n, cfg.d_model)).astype(np.float32)
+
+
+def _embeds(cfg, seed):
+    return np.random.default_rng(seed).standard_normal(
+        (1, cfg.n_image_tokens, VISION_D)).astype(np.float32)
+
+
+def _exact(model, params, prompt, extra, n_new):
+    """Greedy continuation from an exact (unpadded) multimodal prefill."""
+    batch = {"tokens": jnp.asarray([prompt], jnp.int32)}
+    mm = 0
+    for k, v in extra.items():
+        batch[k] = jnp.asarray(v)
+        if k == "embeds":
+            mm = int(np.asarray(v).shape[-2])
+    logits, cache = jax.jit(model.prefill)(params, batch)
+    out = [int(jnp.argmax(logits[0]))]
+    cache = expand_prefill_cache(cache, model.init_cache(1, MAX_SEQ))
+    dec = jax.jit(model.decode_step)
+    pos = mm + len(prompt)
+    for _ in range(n_new - 1):
+        lg, cache = dec(params, cache, {
+            "tokens": jnp.asarray([[out[-1]]], jnp.int32),
+            "positions": jnp.asarray([pos], jnp.int32),
+        })
+        out.append(int(jnp.argmax(lg[0])))
+        pos += 1
+    return out
+
+
+def _encdec_engine(model, params, **kw):
+    kw.setdefault("max_seq", MAX_SEQ)
+    kw.setdefault("max_cross_seq", 32)
+    kw.setdefault("page_size", 8)
+    kw.setdefault("prefill_chunk", 16)
+    return ServeEngine(model, params, n_slots=2, paged=True, **kw)
+
+
+def _vlm_engine(model, params, **kw):
+    kw.setdefault("max_seq", MAX_SEQ)
+    kw.setdefault("page_size", 8)
+    kw.setdefault("prefill_chunk", 16)
+    return ServeEngine(model, params, n_slots=2, paged=True, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Kernel: paged cross attention vs oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("backend", ["xla", "pallas_interpret"])
+@pytest.mark.parametrize(
+    "b,c,h,k,d,page,max_pages,n_pages",
+    [(2, 3, 4, 2, 16, 8, 2, 8), (1, 16, 8, 8, 32, 16, 3, 8)],
+)
+def test_paged_cross_attention_vs_oracle(b, c, h, k, d, page, max_pages,
+                                         n_pages, backend, dtype):
+    q = jnp.asarray(RNG.standard_normal((b, c, h, d)), dtype)
+    kp = jnp.asarray(RNG.standard_normal((n_pages, page, k, d)), dtype)
+    vp = jnp.asarray(RNG.standard_normal((n_pages, page, k, d)), dtype)
+    ids = RNG.permutation(np.arange(1, n_pages))[: b * max_pages]
+    table = jnp.asarray(ids.reshape(b, max_pages), jnp.int32)
+    lens = jnp.asarray(RNG.integers(1, max_pages * page + 1, b), jnp.int32)
+    want = ref.paged_cross_attention(q, kp, vp, table, lens)
+    with ops.use_backend(backend):
+        got = ops.paged_cross_attention(q, kp, vp, table, lens)
+    tol = dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 else \
+        dict(atol=2e-5, rtol=2e-5)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **tol
+    )
+
+
+# ---------------------------------------------------------------------------
+# Enc-dec: parity, cross-region sharing, spill round-trip
+# ---------------------------------------------------------------------------
+
+
+def test_encdec_paged_matches_exact(whisper):
+    """Paged enc-dec serving equals an exact unpadded prefill + masked
+    decode at every prompt length (incl. lengths that cross page and
+    chunk boundaries) and every frame count (incl. a partial last cross
+    page)."""
+    cfg, model, params = whisper
+    cases = [(8, 12), (16, 8), (5, 11), (21, 16)]
+    eng = _encdec_engine(model, params)
+    reqs = []
+    for i, (plen, nf) in enumerate(cases):
+        reqs.append(eng.submit(
+            _tokens(cfg, plen, seed=i), max_new_tokens=4,
+            extra={"frames": _frames(cfg, nf, seed=100 + i)},
+        ))
+    eng.run(400)
+    for r in reqs:
+        assert r.generated == _exact(model, params, r.prompt, r.extra, 4)
+    assert eng.pool.outstanding == 0
+
+
+def test_encdec_paged_matches_dense_where_bucketing_exact(whisper):
+    """At prompt lengths equal to the dense engine's bucket, the paged
+    and dense engines must agree token-for-token."""
+    cfg, model, params = whisper
+    f = _frames(cfg, 12, seed=5)
+    prompts = [_tokens(cfg, 32, seed=s) for s in (20, 21)]
+    dense = ServeEngine(model, params, n_slots=2, max_seq=MAX_SEQ,
+                        paged=False)
+    paged = _encdec_engine(model, params)
+    for p in prompts:
+        dense.submit(p, max_new_tokens=5, extra={"frames": f})
+        paged.submit(p, max_new_tokens=5, extra={"frames": f})
+    dd = sorted(dense.run(300), key=lambda r: r.req_id)
+    pd = sorted(paged.run(300), key=lambda r: r.req_id)
+    assert [r.generated for r in pd] == [r.generated for r in dd]
+
+
+def test_encdec_cross_region_shared(whisper):
+    """Requests with identical frames share one encoder-output region:
+    the encoder runs once, later requests bump refcounts — with the same
+    tokens as an uncached engine."""
+    cfg, model, params = whisper
+    f = _frames(cfg, 16, seed=6)
+    eng = _encdec_engine(model, params)
+    outs = []
+    for s in (30, 31, 32):
+        r = eng.submit(_tokens(cfg, 9, seed=s), max_new_tokens=3,
+                       extra={"frames": f})
+        eng.run(200)
+        outs.append(r)
+    assert eng.stats["cross_regions_computed"] == 1
+    assert eng.stats["cross_regions_shared"] == 2
+    for r in outs:
+        assert r.generated == _exact(model, params, r.prompt, r.extra, 3)
+    assert eng.pool.outstanding == 0
+
+
+def test_encdec_no_false_share_across_frames(whisper):
+    """Identical decoder prompts under *different* audio must not share
+    pages (prompt keys are salted with the frames digest) and must not
+    reuse the other input's encoder region."""
+    cfg, model, params = whisper
+    p = _tokens(cfg, 16, seed=40)
+    eng = _encdec_engine(model, params)
+    r1 = eng.submit(p, max_new_tokens=3,
+                    extra={"frames": _frames(cfg, 12, seed=41)})
+    eng.run(100)
+    r2 = eng.submit(p, max_new_tokens=3,
+                    extra={"frames": _frames(cfg, 12, seed=42)})
+    eng.run(100)
+    assert eng.stats["prefill_tokens_shared"] == 0
+    assert eng.stats["cross_regions_shared"] == 0
+    assert eng.stats["cross_regions_computed"] == 2
+    for r in (r1, r2):
+        assert r.generated == _exact(model, params, r.prompt, r.extra, 3)
+
+
+def test_encdec_no_share_on_prefix_frames(whisper):
+    """Frames that are a page-aligned *prefix* of a longer cached input
+    must not hit its region: the encoder is non-causal, so
+    ``encode(A)[:, :P]`` is not ``encode(A[:, :P])``. Every cross key
+    mixes in the whole-frames digest, so the trie diverges at block 0."""
+    cfg, model, params = whisper
+    p = _tokens(cfg, 9, seed=45)
+    fa = _frames(cfg, 16, seed=46)          # 2 cross pages at page_size 8
+    fb = fa[:, :8]                          # exactly A's first page
+    eng = _encdec_engine(model, params)
+    ra = eng.submit(p, max_new_tokens=3, extra={"frames": fa})
+    eng.run(100)
+    rb = eng.submit(p, max_new_tokens=3, extra={"frames": fb})
+    eng.run(100)
+    assert eng.stats["cross_regions_shared"] == 0
+    assert eng.stats["cross_regions_computed"] == 2
+    assert eng.stats["prefill_tokens_shared"] == 0  # prompt salt differs too
+    for r in (ra, rb):
+        assert r.generated == _exact(model, params, r.prompt, r.extra, 3)
+
+
+def test_encoder_page_spill_recall_roundtrip(whisper):
+    """Encoder-output pages participate in the spill tier: under pool
+    pressure cold cross pages are lent to a peer, and a later request
+    with the same frames recalls them — token-for-token identical to the
+    first time the region was computed."""
+    cfg, model, params = whisper
+    reg = CloudletRegistry()
+    reg.create("serve", "whisper-medium")
+    for h in ("h0", "h1"):
+        reg.join("serve", h)
+    remote = RemotePagePool(reg, "serve", "h0", peer_capacity_pages=32)
+    # prompt 8 (+4 new) = 2 self pages, 16 frames = 2 cross pages; a
+    # 10-usable-page pool cannot retain three distinct cached regions
+    eng = _encdec_engine(model, params, n_pages=11, remote_pool=remote)
+    p = _tokens(cfg, 8, seed=50)
+    frames = [_frames(cfg, 16, seed=60 + i) for i in range(3)]
+    first = []
+    for f in frames:
+        r = eng.submit(p, max_new_tokens=4, extra={"frames": f})
+        eng.run(200)
+        first.append(r.generated)
+    assert eng.stats["pages_spilled"] > 0
+    assert remote.lent > 0
+    # payloads are region-split: a lent blob carries one region's leaves,
+    # never both (shipping the unused half would double spill bandwidth)
+    import json
+
+    for blob in remote._store.values():
+        hlen = int(np.frombuffer(blob[:4], "<u4")[0])
+        keys = {e["key"] for e in json.loads(blob[4:4 + hlen].decode())}
+        assert keys in ({"cross_k_pages", "cross_v_pages"},
+                        {"self_k_pages", "self_v_pages"}), keys
+    r = eng.submit(p, max_new_tokens=4, extra={"frames": frames[0]})
+    eng.run(200)
+    assert eng.stats["pages_recalled"] > 0
+    assert r.generated == first[0]
+    assert eng.pool.outstanding == 0
+
+
+# ---------------------------------------------------------------------------
+# VLM: parity + image-aware prefix sharing
+# ---------------------------------------------------------------------------
+
+
+def test_vlm_paged_matches_exact(llava):
+    cfg, model, params = llava
+    eng = _vlm_engine(model, params)
+    reqs = []
+    for i, plen in enumerate((8, 24, 5)):
+        reqs.append(eng.submit(
+            _tokens(cfg, plen, seed=i), max_new_tokens=4,
+            extra={"embeds": _embeds(cfg, seed=200 + i)},
+        ))
+    eng.run(400)
+    for r in reqs:
+        assert r.generated == _exact(model, params, r.prompt, r.extra, 4)
+    assert eng.pool.outstanding == 0
+
+
+def test_vlm_prefix_share_hit_on_shared_image_and_text(llava):
+    """A shared image + shared text prefix COW-shares across requests:
+    the second admission installs the cached image/text pages and
+    prefills only its unique tail — same tokens as the exact
+    reference."""
+    cfg, model, params = llava
+    img = _embeds(cfg, seed=70)
+    prefix = _tokens(cfg, 16, seed=71)
+    eng = _vlm_engine(model, params)
+    r1 = eng.submit(prefix + _tokens(cfg, 8, seed=72), max_new_tokens=3,
+                    extra={"embeds": img})
+    eng.run(100)
+    r2 = eng.submit(prefix + _tokens(cfg, 8, seed=73), max_new_tokens=3,
+                    extra={"embeds": img})
+    eng.run(100)
+    # image rows (n_image_tokens) + the page-aligned text prefix share
+    assert eng.stats["prefill_tokens_shared"] >= cfg.n_image_tokens + 16
+    assert eng.stats["prefix_hits"] >= 1
+    for r in (r1, r2):
+        assert r.generated == _exact(model, params, r.prompt, r.extra, 3)
+    assert eng.pool.outstanding == 0
+
+
+def test_vlm_no_share_across_different_images(llava):
+    """Identical text under different images must not share pages: the
+    image rows lead the key sequence, so the trie diverges at block 0."""
+    cfg, model, params = llava
+    p = _tokens(cfg, 24, seed=80)
+    eng = _vlm_engine(model, params)
+    r1 = eng.submit(p, max_new_tokens=2,
+                    extra={"embeds": _embeds(cfg, seed=81)})
+    eng.run(100)
+    r2 = eng.submit(p, max_new_tokens=2,
+                    extra={"embeds": _embeds(cfg, seed=82)})
+    eng.run(100)
+    assert eng.stats["prefill_tokens_shared"] == 0
+    for r in (r1, r2):
+        assert r.generated == _exact(model, params, r.prompt, r.extra, 2)
+
+
+# ---------------------------------------------------------------------------
+# Lifecycle: snapshot/restore + submit validation
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("family", ["encdec", "vlm"])
+def test_multimodal_snapshot_restore_resumes_identically(family, whisper,
+                                                         llava):
+    cfg, model, params = whisper if family == "encdec" else llava
+
+    def make():
+        return (_encdec_engine if family == "encdec" else _vlm_engine)(
+            model, params
+        )
+
+    def extra(i):
+        if family == "encdec":
+            return {"frames": _frames(cfg, 12, seed=90 + i)}
+        return {"embeds": _embeds(cfg, seed=90 + i)}
+
+    prompts = [_tokens(cfg, n, seed=i) for i, n in enumerate((8, 20, 6))]
+
+    ref_eng = make()
+    for i, p in enumerate(prompts):
+        ref_eng.submit(p, max_new_tokens=6, extra=extra(i))
+    ref_done = sorted(ref_eng.run(400), key=lambda r: r.req_id)
+
+    eng = make()
+    for i, p in enumerate(prompts):
+        eng.submit(p, max_new_tokens=6, extra=extra(i))
+    for _ in range(2):
+        eng.step()
+    blob = eng.snapshot()
+    eng2 = make()
+    eng2.restore(blob)
+    done2 = sorted(eng2.run(400), key=lambda r: r.req_id)
+
+    assert [r.generated for r in done2] == [r.generated for r in ref_done]
+    assert eng2.pool.outstanding == 0
+
+
+def test_submit_validation(whisper, llava):
+    wcfg, wmodel, wparams = whisper
+    vcfg, vmodel, vparams = llava
+    enc = _encdec_engine(wmodel, wparams)
+    with pytest.raises(ValueError, match="frames"):
+        enc.submit(_tokens(wcfg, 4, seed=1), max_new_tokens=2)
+    with pytest.raises(ValueError, match="max_cross_seq"):
+        enc.submit(_tokens(wcfg, 4, seed=1), max_new_tokens=2,
+                   extra={"frames": _frames(wcfg, 40, seed=1)})
+    with pytest.raises(ValueError, match="unsupported modality"):
+        enc.submit(_tokens(wcfg, 4, seed=1), max_new_tokens=2,
+                   extra={"frames": _frames(wcfg, 8, seed=1), "embeds": 1})
+    vlm = _vlm_engine(vmodel, vparams)
+    with pytest.raises(ValueError, match="embeds"):
+        vlm.submit(_tokens(vcfg, 4, seed=1), max_new_tokens=2)
+    # text-only paged families still reject modality extras outright
+    qcfg = REDUCED["qwen3-8b"]
+    qmodel = get_model(qcfg)
+    qeng = ServeEngine(qmodel, qmodel.init(jax.random.key(0)), n_slots=1,
+                       max_seq=32, paged=True, page_size=8)
+    with pytest.raises(ValueError, match="unsupported modality"):
+        qeng.submit([1, 2, 3], max_new_tokens=2, extra={"embeds": np.ones(3)})
