@@ -19,6 +19,11 @@ Sections:
                  --prefix-share`, `--spill` or `--vlm-paged` for one
                  scenario alone; REPRO_BENCH_TINY=1 shrinks everything
                  for the CI smoke job)
+- batch        — verified batch-inference tier under seeded churn:
+                 workunit replication + hash-quorum validation + re-issue
+                 (the ``batch-churn`` rows of BENCH_SERVING.json; run
+                 `python -m benchmarks.batch_bench --batch-churn`
+                 standalone)
 """
 
 import argparse
@@ -26,7 +31,7 @@ import csv
 
 
 SECTIONS = ["reliability", "performance", "snapshot", "straggler",
-            "kernel", "roofline", "serving"]
+            "kernel", "roofline", "serving", "batch"]
 
 
 def main() -> None:
@@ -56,6 +61,8 @@ def main() -> None:
                 from benchmarks import roofline_bench as m
             elif name == "serving":
                 from benchmarks import serving_bench as m
+            elif name == "batch":
+                from benchmarks import batch_bench as m
             m.main(rows)
         except Exception as e:  # keep the harness running
             print(f"SECTION FAILED: {name}: {type(e).__name__}: {e}")

@@ -54,6 +54,13 @@ class AvailabilityChecker:
                 newly_failed.append(p.host_id)
         return newly_failed
 
+    def mark_failed(self, host_id: str) -> None:
+        """Explicitly flag a host DOWN (a reported leave/failure): the
+        next :meth:`check` sweep won't re-report it as newly failed."""
+        p = self._presence.get(host_id)
+        if p is not None:
+            p.available = False
+
     def is_available(self, host_id: str) -> bool:
         p = self._presence.get(host_id)
         return bool(p and p.available)

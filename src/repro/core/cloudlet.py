@@ -178,6 +178,11 @@ class CloudletRegistry:
     def for_service(self, service: str) -> list[Cloudlet]:
         return [cl for cl in self._cloudlets.values() if cl.service == service]
 
+    def members(self, name: str) -> list[str]:
+        """Members of cloudlet ``name``, sorted for deterministic
+        iteration (the batch tier's placement scope)."""
+        return sorted(self._cloudlets[name].members)
+
     def peers(self, name: str, host_id: str) -> list[str]:
         """Other members of ``host_id``'s cloudlet ``name``."""
         return [h for h in self._cloudlets[name].members if h != host_id]

@@ -19,8 +19,19 @@ from dataclasses import dataclass
 
 
 def host_reliability(ca: int, cc: int, nf: int) -> float:
-    """The paper's formula. Returns a percentage in [0, 100]."""
-    assert ca >= 0 and cc >= 0 and nf >= 0, (ca, cc, nf)
+    """The paper's formula. Returns a percentage clamped to [0, 100].
+
+    Inputs are counters and must be non-negative; negatives raise
+    ``ValueError`` (an ``assert`` would vanish under ``python -O`` and a
+    corrupted counter would silently produce a nonsense score). The
+    zero-denominator cases the formula leaves open are pinned down
+    explicitly: a fresh host (CA == NF == 0) is fully reliable, a host
+    with failures but no assignments (CA == 0, NF > 0 — died while idle)
+    is fully unreliable, and CC > CA (double-reported completions) caps
+    at 100 rather than overflowing.
+    """
+    if ca < 0 or cc < 0 or nf < 0:
+        raise ValueError(f"negative reliability counters: {(ca, cc, nf)}")
     if nf == ca:
         # includes the CA == 0, NF == 0 fresh-host case only when NF==CA==0
         # is caught by the NF == 0 branch below per the paper's ordering.
@@ -33,7 +44,7 @@ def host_reliability(ca: int, cc: int, nf: int) -> float:
         # failures recorded before any assignment (host died while idle);
         # not covered by the paper's formula — treat like the NF==CA case.
         return 0.0
-    return min(100.0, (cc / ca) * 100.0)
+    return min(100.0, max(0.0, (cc / ca) * 100.0))
 
 
 @dataclass
@@ -48,6 +59,8 @@ class HostRecord:
     resource_load: float = 0.0  # (5) current load, reported by the client
     storage_used: int = 0       # bytes of ad hoc data (snapshots, client)
     storage_limit: int = 1 << 62  # host-user-set cap (regular BOINC pref)
+    corrupt_results: int = 0    # quorum-rejected results (batch tier)
+    quarantined_until: float = 0.0  # no placements before this sim time
 
     @property
     def nf(self) -> int:
@@ -57,18 +70,28 @@ class HostRecord:
         return host_reliability(self.jobs_assigned, self.jobs_completed, self.nf)
 
     def failure_probability(self) -> float:
-        """P(this host fails a job) = 1 - reliability, as a fraction."""
-        return 1.0 - self.reliability() / 100.0
+        """P(this host fails a job) = 1 - reliability, clamped to [0, 1]."""
+        return min(1.0, max(0.0, 1.0 - self.reliability() / 100.0))
 
     def storage_full(self) -> bool:
         return self.storage_used >= self.storage_limit
 
 
 class ReliabilityRegistry:
-    """The server-side table of host reliability records."""
+    """The server-side table of host reliability records.
 
-    def __init__(self):
+    Beyond the paper's §III-B factors it tracks *error quarantine* for
+    the verified batch tier: a host whose results keep losing the hash
+    quorum vote is suspended from placement for exponentially growing
+    windows (``quarantine_base_s * 2^excess``), on top of the reliability
+    drop each corrupt result already causes.
+    """
+
+    def __init__(self, *, quarantine_after: int = 3,
+                 quarantine_base_s: float = 300.0):
         self._records: dict[str, HostRecord] = {}
+        self.quarantine_after = quarantine_after
+        self.quarantine_base_s = quarantine_base_s
 
     # -- membership ----------------------------------------------------------
     def add_host(self, host_id: str, *, storage_limit: int | None = None
@@ -109,6 +132,25 @@ class ReliabilityRegistry:
     def record_storage(self, host_id: str, used: int) -> None:
         self.add_host(host_id).storage_used = used
 
+    def record_corrupt_result(self, host_id: str, now: float = 0.0) -> None:
+        """Quorum rejected this host's result (batch tier feedback).
+
+        Counts as a guest failure — the §III-B score drops, routing
+        placement away — and past ``quarantine_after`` rejections the
+        host is quarantined for exponentially growing windows.
+        """
+        rec = self.add_host(host_id)
+        rec.corrupt_results += 1
+        rec.guest_failures += 1
+        excess = rec.corrupt_results - self.quarantine_after
+        if excess >= 0:
+            window = self.quarantine_base_s * (2 ** min(excess, 6))
+            rec.quarantined_until = max(rec.quarantined_until, now + window)
+
+    def is_quarantined(self, host_id: str, now: float) -> bool:
+        rec = self._records.get(host_id)
+        return bool(rec and now < rec.quarantined_until)
+
     # -- queries --------------------------------------------------------------
     def reliability(self, host_id: str) -> float:
         return self._records[host_id].reliability()
@@ -134,6 +176,8 @@ class ReliabilityRegistry:
                 resource_load=r.resource_load,
                 storage_used=r.storage_used,
                 storage_limit=r.storage_limit,
+                corrupt_results=r.corrupt_results,
+                quarantined_until=r.quarantined_until,
             )
             for h, r in self._records.items()
         }

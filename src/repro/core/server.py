@@ -108,6 +108,14 @@ class AdHocServer:
         )
         self.hosts: dict[str, HostInfo] = {}
         self.jobs: dict[str, CloudJob] = {}
+        # hosts currently considered down: makes _on_host_failure
+        # idempotent when the same failure is reported twice (e.g. an
+        # explicit report racing the availability sweep) — double
+        # revocation would double-count the failure and re-queue twice
+        self._down: set[str] = set()
+        # batch-inference masters (repro.serving.batch) notified on host
+        # failure so lost workunit replicas are re-issued
+        self._batch_masters: list[Any] = []
         self._outbox: dict[str, list[Command]] = {}
         self._job_counter = itertools.count()
         self._guest_counter = itertools.count()
@@ -146,11 +154,18 @@ class AdHocServer:
             if cl not in info.cloudlets:
                 info.cloudlets.append(cl)
         info.vm_ready = True  # V-BOINC steps (1)-(4) complete
+        self._down.discard(host_id)
         self._emit(now, "host_registered", host=host_id)
         return info
 
     def create_cloudlet(self, name: str, service: str):
         return self.cloudlets.create(name, service)
+
+    def register_batch_master(self, master: Any) -> None:
+        """Wire a :class:`repro.serving.batch.BatchMaster` into failure
+        handling (lost replicas re-issue) and the job-status API."""
+        if master not in self._batch_masters:
+            self._batch_masters.append(master)
 
     # -------------------------------------------------- job service (work_creator)
     def submit_job(
@@ -309,8 +324,7 @@ class AdHocServer:
         info = self.hosts[host_id]
         if info.guest_id == job.guest_id:
             info.guest_id = None
-        for h in self.snapshots.forget(job_id):
-            self._push_cmd(h, Command("delete_snapshot", dict(job_id=job_id)))
+        self.forget_snapshots(job_id)
         self._emit(now, "job_completed", job=job_id, host=host_id)
         self.schedule(now)
 
@@ -347,13 +361,28 @@ class AdHocServer:
             self._emit(now, "guest_lost_on_reboot", host=host_id)
             self._reschedule_job_of(host_id, now)
         self.availability.record_poll(host_id, now)
+        self._down.discard(host_id)     # a fresh DOWN episode may begin
         if info is not None:
             info.guest_id = None       # its guest died with the failure
             info.suspended = False
             info.vm_ready = True
         self.schedule(now)
 
+    def report_host_failure(self, host_id: str, now: float) -> None:
+        """Explicit failure/leave report (e.g. a host-user reclaims their
+        machine). Safe to race the availability sweep: the handler is
+        idempotent per DOWN episode."""
+        self.availability.mark_failed(host_id)
+        self._on_host_failure(host_id, now)
+        self.schedule(now)
+
     def _on_host_failure(self, host_id: str, now: float) -> None:
+        if host_id in self._down:
+            # already handled this DOWN episode: a second report (explicit
+            # report + sweep, or duplicated sweep) must not double-count
+            # the failure, re-revoke leases, or re-queue the job again
+            return
+        self._down.add(host_id)
         self.reliability.record_host_failure(host_id)
         self.snapshots.drop_host(host_id)
         # the failed host took any KV pages it was holding for neighbors
@@ -368,6 +397,8 @@ class AdHocServer:
         if info and info.guest_id is not None:
             self._reschedule_job_of(host_id, now)
             info.guest_id = None
+        for master in self._batch_masters:
+            master.on_host_failure(host_id, now)
 
     def _on_guest_failure(self, host_id: str, now: float) -> None:
         self.reliability.record_guest_failure(host_id)
@@ -393,6 +424,35 @@ class AdHocServer:
         job.assigned_host = None
         job.guest_id = None
         self.schedule(now)
+
+    # ------------------------------------------------------------ status API
+    def job_status(self, job_id: str) -> dict | None:
+        """Uniform job-status lookup: cloud jobs (:class:`CloudJob`) and
+        batch-inference jobs answer through the same API."""
+        job = self.jobs.get(job_id)
+        if job is not None:
+            return {
+                "job_id": job.job_id, "kind": "cloud",
+                "state": job.state.value, "cloudlet": job.cloudlet,
+                "assigned_host": job.assigned_host,
+                "attempts": job.attempts, "restores": job.restores,
+                "restarts_from_zero": job.restarts_from_zero,
+            }
+        for master in self._batch_masters:
+            status = master.job_status(job_id)
+            if status is not None:
+                return status
+        return None
+
+    def forget_snapshots(self, guest_id: str, *, keep: str | None = None
+                         ) -> None:
+        """Drop every stored replica of ``guest_id``'s snapshot and tell
+        the holders to delete their copy (§III-D cleanup, shared by job
+        completion and workunit validation)."""
+        for h in self.snapshots.forget(guest_id):
+            if h != keep:
+                self._push_cmd(h, Command(
+                    "delete_snapshot", dict(job_id=guest_id)))
 
     # ----------------------------------------------------- state replication
     def to_state(self) -> dict:
@@ -439,6 +499,11 @@ class AdHocServer:
         srv._job_counter = itertools.count(len(srv.jobs))
         for h, kv in state["hosts"].items():
             srv.hosts[h] = HostInfo(h, **kv)
+        # hosts already down in the replicated availability state have had
+        # their failure handled by the primary: don't re-handle on takeover
+        srv._down = {
+            h for h in srv.hosts if not srv.availability.is_available(h)
+        }
         return srv
 
     # ---------------------------------------------------------------- stats

@@ -43,8 +43,25 @@ snapshotable, so the ad hoc continuity protocol covers inference jobs
 exactly as it covers training jobs — and paged snapshots scale with the
 working set, not ``n_slots × max_seq`` (lent pages stay on their peers;
 only their lease ids travel in the blob).
+
+**Verified batch tier** (:mod:`repro.serving.batch`): on top of the
+interactive engine, a BOINC-style :class:`~repro.serving.batch.BatchMaster`
+shards prompt jobs into page-aligned workunits, replicates them across
+cloudlet hosts, validates results by bitwise hash quorum over greedy
+decodes, and re-issues work on churn — unreliable hosts, dependable
+batch answers.
 """
 
+from repro.serving.batch import (
+    BatchJob,
+    BatchMaster,
+    FaultEvent,
+    FaultPlan,
+    Workunit,
+    WuState,
+    make_engine_factory,
+    result_digest,
+)
 from repro.serving.engine import Request, ServeEngine
 from repro.serving.kvcache import (
     PagePool,
@@ -62,4 +79,7 @@ from repro.serving.kvcache import (
 __all__ = ["ServeEngine", "Request", "PagePool", "PrefixIndex",
            "RemotePagePool", "SpilledPage",
            "init_cache", "init_paged_cache", "pages_needed", "scatter_slot",
-           "cache_shardings", "paged_cache_shardings"]
+           "cache_shardings", "paged_cache_shardings",
+           "BatchMaster", "BatchJob", "Workunit", "WuState",
+           "FaultPlan", "FaultEvent", "make_engine_factory",
+           "result_digest"]

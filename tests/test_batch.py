@@ -1,0 +1,265 @@
+"""Verified batch tier: workunit sharding, hash-quorum validation,
+corrupt-result handling, churn re-issue, graceful degradation."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import REDUCED
+from repro.core.server import AdHocServer
+from repro.core.simulation import SimClock
+from repro.models import get_model
+from repro.serving.batch import (
+    BatchMaster,
+    FaultEvent,
+    FaultPlan,
+    WuState,
+    make_engine_factory,
+    result_digest,
+)
+from repro.serving.kvcache import pages_needed
+
+ENGINE_KW = dict(n_slots=2, max_seq=96, page_size=8, n_pages=48)
+PAGE_SIZE = 8
+MAX_NEW = 8
+
+
+@pytest.fixture(scope="module")
+def qwen():
+    cfg = REDUCED["qwen3-8b"]
+    model = get_model(cfg)
+    params = model.init(jax.random.key(0))
+    return cfg, model, params
+
+
+@pytest.fixture(scope="module")
+def factory(qwen):
+    _, model, params = qwen
+    # one factory for the whole module: replicas share jitted kernels,
+    # so the model compiles once across all tests here
+    return make_engine_factory(model, params, **ENGINE_KW)
+
+
+def prompts(cfg, n, length=8, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(1, cfg.vocab_size, length).tolist() for _ in range(n)]
+
+
+def make_cluster(factory, hosts, **master_kw):
+    srv = AdHocServer(failure_timeout=master_kw.pop("failure_timeout", 4.0))
+    srv.create_cloudlet("batch", "qwen3-8b")
+    for h in hosts:
+        srv.register_host(h, 0.0, cloudlets=["batch"])
+    kw = dict(replication=2, min_quorum=2, wu_pages=4, page_size=PAGE_SIZE,
+              deadline_s=30.0, backoff_base_s=1.0, snapshot_every_s=3.0,
+              decode_step_s=1.0)
+    kw.update(master_kw)
+    return srv, BatchMaster(srv, "batch", factory, **kw)
+
+
+def reference(factory, ps, max_new=MAX_NEW):
+    eng = factory("__reference__")
+    reqs = [eng.submit(p, max_new_tokens=max_new) for p in ps]
+    eng.run(5000)
+    return [list(r.generated) for r in reqs]
+
+
+class TestSharding:
+    def test_workunits_are_page_aligned_and_cover_all_prompts(self, factory):
+        srv, master = make_cluster(factory, ["a", "b"], wu_pages=4)
+        ps = [[1] * n for n in (3, 8, 20, 5, 8, 2)]
+        job = master.submit(ps, max_new_tokens=MAX_NEW, now=0.0)
+        wus = [master.wus[w] for w in master.jobs[job].wu_ids]
+        covered = [i for wu in wus for i in wu.prompt_ids]
+        assert covered == list(range(len(ps)))      # all prompts, in order
+        for wu in wus:
+            cost = sum(pages_needed(len(p) + MAX_NEW, PAGE_SIZE)
+                       for p in wu.prompts)
+            # fits the page budget unless a single prompt alone exceeds it
+            assert cost <= master.wu_pages or len(wu.prompts) == 1
+
+    def test_digest_is_token_sensitive(self):
+        a = result_digest([[1, 2, 3], [4, 5]])
+        assert a == result_digest([[1, 2, 3], [4, 5]])
+        assert a != result_digest([[1, 2, 4], [4, 5]])
+        assert a != result_digest([[1, 2], [3, 4, 5]])
+
+
+class TestQuorum:
+    def test_clean_run_validates_without_reissue(self, qwen, factory):
+        cfg, _, _ = qwen
+        srv, master = make_cluster(factory, [f"h{i}" for i in range(4)])
+        ps = prompts(cfg, 4, seed=1)
+        job = master.submit(ps, max_new_tokens=MAX_NEW, now=0.0)
+        summary = master.run(SimClock(), max_ticks=200)
+        assert summary["jobs"][job] == "completed"
+        assert summary["reissued"] == 0
+        assert summary["quorum_rejections"] == 0
+        assert summary["wasted_tokens"] == 0
+        assert master.results(job) == reference(factory, ps)
+
+    def test_corrupt_minority_is_outvoted(self, qwen, factory):
+        """Replication 3 / quorum 2: one replica reports a flipped token;
+        the two honest digests reach quorum and the corrupter is
+        penalized — no re-issue needed."""
+        cfg, _, _ = qwen
+        srv, master = make_cluster(factory, [f"h{i}" for i in range(5)],
+                                   replication=3, min_quorum=2)
+        ps = prompts(cfg, 2, seed=2)
+        job = master.submit(ps, max_new_tokens=MAX_NEW, now=0.0)
+        plan = FaultPlan([FaultEvent(at=0.0, kind="corrupt", host="h0")])
+        summary = master.run(SimClock(), fault_plan=plan, max_ticks=200)
+        assert summary["jobs"][job] == "completed"
+        assert summary["quorum_rejections"] == 1
+        assert summary["reissued"] == 0
+        wu = master.wus[master.jobs[job].wu_ids[0]]
+        assert len(wu.results[wu.canonical]) >= 2
+        assert "h0" not in wu.results[wu.canonical]
+        rec = srv.reliability.get("h0")
+        assert rec.corrupt_results == 1
+        assert rec.guest_failures == 1          # score dropped
+        assert master.results(job) == reference(factory, ps)
+
+    def test_quorum_unreachable_reissues_to_fresh_hosts(self, qwen, factory):
+        """Replication 2 / quorum 2 with one corrupter among the two: the
+        1-vs-1 digest split can't reach quorum, so the transitioner issues
+        a replica to a fresh host and the job still completes."""
+        cfg, _, _ = qwen
+        srv, master = make_cluster(factory, [f"h{i}" for i in range(5)])
+        ps = prompts(cfg, 2, seed=3)
+        job = master.submit(ps, max_new_tokens=MAX_NEW, now=0.0)
+        # initial placement is reliability-ranked (ties by id): h0 + h1
+        plan = FaultPlan([FaultEvent(at=0.0, kind="corrupt", host="h0")])
+        summary = master.run(SimClock(), fault_plan=plan, max_ticks=300)
+        assert summary["jobs"][job] == "completed"
+        assert summary["reissued_quorum"] >= 1
+        wu = master.wus[master.jobs[job].wu_ids[0]]
+        tie_breaker = (set(wu.results[wu.canonical]) - {"h0", "h1"})
+        assert tie_breaker                       # a fresh host settled it
+        assert "h0" in wu.hosts_rejected
+        assert master.results(job) == reference(factory, ps)
+
+    def test_repeated_corruption_quarantines_host(self, qwen, factory):
+        """Error quarantine: a host that keeps losing the quorum vote is
+        barred from placement, not just down-ranked."""
+        cfg, _, _ = qwen
+        srv, master = make_cluster(factory, [f"h{i}" for i in range(5)])
+        srv.reliability.quarantine_after = 2
+        ps = prompts(cfg, 6, seed=4)             # 3 workunits
+        job = master.submit(ps, max_new_tokens=MAX_NEW, now=0.0)
+        plan = FaultPlan([FaultEvent(at=0.0, kind="corrupt", host="h0",
+                                     count=5)])
+        clock = SimClock()
+        summary = master.run(clock, fault_plan=plan, max_ticks=400)
+        assert summary["jobs"][job] == "completed"
+        rec = srv.reliability.get("h0")
+        assert rec.corrupt_results >= 2
+        assert srv.reliability.is_quarantined("h0", clock.now())
+        assert master.results(job) == reference(factory, ps)
+
+
+class TestChurn:
+    def test_host_crash_reissues_and_resumes_from_snapshot(self, qwen,
+                                                           factory):
+        cfg, _, _ = qwen
+        srv, master = make_cluster(factory, [f"h{i}" for i in range(5)],
+                                   failure_timeout=4.0, snapshot_every_s=3.0)
+        ps = prompts(cfg, 2, seed=5)
+        job = master.submit(ps, max_new_tokens=16, now=0.0)
+        plan = FaultPlan([FaultEvent(at=7.0, kind="crash", host="h0")])
+        summary = master.run(SimClock(), fault_plan=plan, max_ticks=300)
+        assert summary["jobs"][job] == "completed"
+        assert summary["crash_cancellations"] == 1
+        assert summary["reissued_crash"] >= 1
+        # the re-issued replica restored a mid-decode snapshot instead of
+        # restarting from token zero
+        assert summary["resumed_from_snapshot"] >= 1
+        assert srv.reliability.get("h0").host_failures == 1
+        assert master.results(job) == reference(factory, ps, 16)
+
+    def test_slow_host_times_out_and_work_reissues(self, qwen, factory):
+        cfg, _, _ = qwen
+        srv, master = make_cluster(factory, [f"h{i}" for i in range(5)],
+                                   deadline_s=10.0)
+        ps = prompts(cfg, 2, seed=6)
+        job = master.submit(ps, max_new_tokens=16, now=0.0)
+        plan = FaultPlan([FaultEvent(at=0.0, kind="slow", host="h0",
+                                     factor=10.0)])
+        summary = master.run(SimClock(), fault_plan=plan, max_ticks=300)
+        assert summary["jobs"][job] == "completed"
+        assert summary["timeouts"] >= 1
+        assert summary["reissued_timeout"] >= 1
+        assert master.results(job) == reference(factory, ps, 16)
+
+    def test_exhausted_attempts_degrade_job_to_partial(self, qwen, factory):
+        """Graceful degradation: a workunit that exhausts its attempt
+        budget fails alone; sibling workunits still validate and the job
+        surfaces per-prompt results with holes, not an error."""
+        cfg, _, _ = qwen
+        srv, master = make_cluster(factory, [f"h{i}" for i in range(4)],
+                                   max_wu_attempts=2)
+        ps = prompts(cfg, 4, seed=7)             # 2 workunits, 2 hosts each
+        job = master.submit(ps, max_new_tokens=MAX_NEW, now=0.0)
+        # wu000 lands on h0+h1 (rank ties by id): h0 corrupts, so wu000
+        # splits 1-vs-1 and hits the 2-attempt cap; wu001 (h2+h3) is clean
+        plan = FaultPlan([FaultEvent(at=0.0, kind="corrupt", host="h0")])
+        summary = master.run(SimClock(), fault_plan=plan, max_ticks=300)
+        assert summary["jobs"][job] == "partial"
+        status = srv.job_status(job)
+        assert status["validated"] == 1 and status["failed"] == 1
+        got = master.results(job)
+        expect = reference(factory, ps)
+        failed_wu = next(w for w in master.wus.values()
+                         if w.state == WuState.FAILED)
+        for i, (g, e) in enumerate(zip(got, expect)):
+            if i in failed_wu.prompt_ids:
+                assert g is None                 # surfaced as a hole
+            else:
+                assert g == e                    # siblings unaffected
+
+    def test_never_colocates_replicas_of_one_workunit(self, qwen, factory):
+        cfg, _, _ = qwen
+        srv, master = make_cluster(factory, [f"h{i}" for i in range(6)],
+                                   replication=3, min_quorum=2)
+        job = master.submit(prompts(cfg, 2, seed=8), max_new_tokens=4,
+                            now=0.0)
+        clock = SimClock()
+        seen: dict[str, set] = {}
+        for _ in range(40):
+            now = clock.now()
+            for h in srv.cloudlets.members("batch"):
+                srv.poll(h, now)
+            srv.tick(now)
+            master.tick(now, 1.0)
+            for wu in master.wus.values():
+                hosts_now = [a.host for a in wu.active]
+                assert len(hosts_now) == len(set(hosts_now))
+                seen.setdefault(wu.wu_id, set()).update(hosts_now)
+            clock.advance(1.0)
+        assert master.jobs[job].state == "completed"
+        assert all(len(v) >= 3 for v in seen.values())
+
+
+class TestServerIntegration:
+    def test_job_status_covers_cloud_and_batch_jobs(self, qwen, factory):
+        cfg, _, _ = qwen
+        srv, master = make_cluster(factory, [f"h{i}" for i in range(4)])
+        cloud = srv.submit_job("batch", 10.0, now=0.0)
+        batch = master.submit(prompts(cfg, 2, seed=9), max_new_tokens=4,
+                              now=0.0)
+        assert srv.job_status(cloud)["kind"] == "cloud"
+        st = srv.job_status(batch)
+        assert st["kind"] == "batch" and st["total"] == 1
+        assert srv.job_status("nope") is None
+
+    def test_validation_cleans_up_workunit_snapshots(self, qwen, factory):
+        cfg, _, _ = qwen
+        srv, master = make_cluster(factory, [f"h{i}" for i in range(5)],
+                                   snapshot_every_s=2.0)
+        job = master.submit(prompts(cfg, 2, seed=10), max_new_tokens=16,
+                            now=0.0)
+        summary = master.run(SimClock(), max_ticks=200)
+        assert summary["jobs"][job] == "completed"
+        assert summary["snapshots_placed"] >= 1
+        for wid in master.jobs[job].wu_ids:
+            assert srv.snapshots.locations(f"wu:{wid}") == []

@@ -39,6 +39,28 @@ class TestFormula:
         # reliability stays CC/CA
         assert host_reliability(4, 3, 5) == 75.0
 
+    def test_zero_denominator_combinations(self):
+        # every CA == 0 shape resolves without dividing by zero
+        assert host_reliability(0, 0, 0) == 100.0   # fresh host
+        assert host_reliability(0, 0, 1) == 0.0     # died while idle
+        assert host_reliability(0, 2, 0) == 100.0   # NF == 0 wins
+        assert host_reliability(0, 2, 3) == 0.0
+
+    def test_overcounted_completions_clamped(self):
+        # CC > CA (double-reported completion) must not exceed 100
+        assert host_reliability(2, 5, 1) == 100.0
+
+    def test_negative_counters_rejected(self):
+        for bad in [(-1, 0, 0), (0, -1, 0), (0, 0, -1), (-2, -2, -2)]:
+            with pytest.raises(ValueError):
+                host_reliability(*bad)
+
+    def test_score_always_in_range(self):
+        for ca in range(4):
+            for cc in range(4):
+                for nf in range(4):
+                    assert 0.0 <= host_reliability(ca, cc, nf) <= 100.0
+
 
 class TestRecord:
     def test_nf_sums_host_and_guest_failures(self):
@@ -53,6 +75,16 @@ class TestRecord:
         assert r.storage_full()
         r.storage_limit = 11
         assert not r.storage_full()
+
+    def test_failure_probability_clamped_to_unit_interval(self):
+        # CC > CA would make 1 - rel/100 dip below 0 without the clamp
+        r = HostRecord("h", jobs_assigned=2, jobs_completed=5,
+                       host_failures=1)
+        assert r.failure_probability() == 0.0
+        for ca, cc, nf in [(0, 0, 0), (0, 0, 2), (3, 1, 2), (5, 0, 5)]:
+            r = HostRecord("h", jobs_assigned=ca, jobs_completed=cc,
+                           guest_failures=nf)
+            assert 0.0 <= r.failure_probability() <= 1.0
 
 
 class TestRegistry:
@@ -89,3 +121,37 @@ class TestRegistry:
         reg2 = ReliabilityRegistry.from_state(reg.to_state())
         assert reg2.reliability("a") == reg.reliability("a")
         assert reg2.get("a").guest_failures == 1
+
+
+class TestQuarantine:
+    def test_corrupt_result_lowers_score(self):
+        reg = ReliabilityRegistry()
+        reg.record_assignment("a")
+        reg.record_corrupt_result("a", now=0.0)
+        rec = reg.get("a")
+        assert rec.corrupt_results == 1
+        assert rec.guest_failures == 1
+        assert reg.reliability("a") == 0.0
+
+    def test_quarantine_after_threshold_with_growing_windows(self):
+        reg = ReliabilityRegistry(quarantine_after=2, quarantine_base_s=10.0)
+        reg.add_host("a")
+        reg.record_corrupt_result("a", now=0.0)
+        assert not reg.is_quarantined("a", 0.0)      # below threshold
+        reg.record_corrupt_result("a", now=5.0)      # 2nd: base window
+        assert reg.is_quarantined("a", 5.0)
+        assert not reg.is_quarantined("a", 15.1)     # 5 + 10 elapsed
+        reg.record_corrupt_result("a", now=20.0)     # 3rd: doubled window
+        assert reg.is_quarantined("a", 39.0)
+        assert not reg.is_quarantined("a", 40.1)
+
+    def test_unknown_host_is_not_quarantined(self):
+        assert not ReliabilityRegistry().is_quarantined("ghost", 1e9)
+
+    def test_quarantine_state_round_trips(self):
+        reg = ReliabilityRegistry(quarantine_after=1)
+        reg.record_corrupt_result("a", now=3.0)
+        reg2 = ReliabilityRegistry.from_state(reg.to_state())
+        assert reg2.get("a").corrupt_results == 1
+        assert reg2.get("a").quarantined_until == \
+            reg.get("a").quarantined_until

@@ -117,6 +117,35 @@ class TestFailureAndRestore:
             assert any(c.kind == "delete_snapshot" for c in cmds)
         assert srv.snapshots.locations(job_id) == []
 
+    def test_double_host_failure_report_is_idempotent(self):
+        """Regression: the same DOWN episode reported twice (an explicit
+        report racing the availability sweep) must not double-count the
+        failure or re-queue the job twice."""
+        srv = make_server()
+        job_id = srv.submit_job("cl", 100.0, now=0.0)
+        runner = srv.jobs[job_id].assigned_host
+        srv.report_host_failure(runner, 10.0)
+        rec = srv.reliability.get(runner)
+        attempts = srv.jobs[job_id].attempts
+        assert rec.host_failures == 1
+        srv.report_host_failure(runner, 11.0)          # duplicate report
+        assert rec.host_failures == 1                  # not double-counted
+        assert srv.jobs[job_id].attempts == attempts   # no double re-queue
+        # the sweep later notices the same silence: still no re-handling
+        others = [h for h in ("a", "b", "c") if h != runner]
+        for t in (60.0, 120.0, 180.0):
+            for h in others:
+                srv.poll(h, t)
+        assert srv.tick(181.0) == []
+        assert rec.host_failures == 1
+        # after the host returns, a *new* failure episode counts again
+        srv.host_returned(runner, 200.0)
+        for t in (260.0, 320.0, 380.0):
+            for h in others:
+                srv.poll(h, t)
+        assert srv.tick(381.0) == [runner]
+        assert rec.host_failures == 2
+
     def test_max_attempts_fails_permanently(self):
         srv = make_server(hosts=("a",), max_job_attempts=2)
         job_id = srv.submit_job("cl", 10.0, now=0.0)
