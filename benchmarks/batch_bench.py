@@ -4,7 +4,7 @@ serving under seeded churn.
 A cloudlet of unreliable hosts runs one batch job through the BOINC-style
 :class:`~repro.serving.batch.BatchMaster` (workunit replication + bitwise
 hash-quorum validation + transitioner re-issue) while a seeded
-:class:`~repro.serving.batch.FaultPlan` injects the paper's failure modes
+:class:`~repro.core.faults.FaultPlan` injects the paper's failure modes
 mid-job on the :class:`~repro.core.simulation.SimClock` timeline:
 
 - **crashes** — ≥25% of the hosts fall silent mid-job; the §III-A
@@ -57,10 +57,11 @@ ENGINE_KW = dict(n_slots=2, max_seq=96, page_size=PAGE_SIZE, n_pages=48)
 def main(rows=None) -> list[dict]:
     from benchmarks.serving_bench import write_json
     from repro.configs import REDUCED
+    from repro.core.faults import FaultPlan
     from repro.core.server import AdHocServer
     from repro.core.simulation import SimClock
     from repro.models import get_model
-    from repro.serving.batch import BatchMaster, FaultPlan, make_engine_factory
+    from repro.serving.batch import BatchMaster, make_engine_factory
 
     rows = rows if rows is not None else []
     cfg = REDUCED[ARCH]

@@ -24,6 +24,11 @@ Sections:
                  (the ``batch-churn`` rows of BENCH_SERVING.json; run
                  `python -m benchmarks.batch_bench --batch-churn`
                  standalone)
+- cell         — elastic tensor-parallel serving cell under seeded churn:
+                 re-shard on host loss + snapshot restore + teacher-forced
+                 mid-stream replay + priority shedding (the ``cell-churn``
+                 row of BENCH_SERVING.json; run
+                 `python -m benchmarks.cell_bench --cell-churn` standalone)
 """
 
 import argparse
@@ -31,7 +36,7 @@ import csv
 
 
 SECTIONS = ["reliability", "performance", "snapshot", "straggler",
-            "kernel", "roofline", "serving", "batch"]
+            "kernel", "roofline", "serving", "batch", "cell"]
 
 
 def main() -> None:
@@ -63,6 +68,8 @@ def main() -> None:
                 from benchmarks import serving_bench as m
             elif name == "batch":
                 from benchmarks import batch_bench as m
+            elif name == "cell":
+                from benchmarks import cell_bench as m
             m.main(rows)
         except Exception as e:  # keep the harness running
             print(f"SECTION FAILED: {name}: {type(e).__name__}: {e}")

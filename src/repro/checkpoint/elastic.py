@@ -34,7 +34,14 @@ def plan_elastic_mesh(
     groups can't host a replica). If fewer than one model group survives,
     model parallelism degrades to the largest power-of-two that fits.
     """
-    assert n_devices >= 1
+    if n_devices < 1:
+        raise ValueError(
+            f"plan_elastic_mesh needs at least one surviving device, got "
+            f"n_devices={n_devices}")
+    if model_parallel < 1:
+        raise ValueError(
+            f"model_parallel must be >= 1, got {model_parallel} (a model "
+            "axis of zero or negative width has no layout)")
     mp = model_parallel
     while mp > n_devices:
         mp //= 2
@@ -49,7 +56,15 @@ def plan_elastic_mesh(
 
 
 def make_elastic_mesh(devices, data: int, model: int) -> Mesh:
-    arr = np.array(list(devices)[: data * model]).reshape(data, model)
+    devices = list(devices)
+    if data < 1 or model < 1:
+        raise ValueError(f"mesh axes must be >= 1, got ({data}, {model})")
+    if len(devices) < data * model:
+        raise ValueError(
+            f"cannot build a ({data}, {model}) mesh from {len(devices)} "
+            f"device(s): need {data * model}. Re-plan the grid for the "
+            "surviving devices with plan_elastic_mesh() first.")
+    arr = np.array(devices[: data * model]).reshape(data, model)
     return Mesh(arr, ("data", "model"))
 
 

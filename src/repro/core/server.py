@@ -161,11 +161,19 @@ class AdHocServer:
     def create_cloudlet(self, name: str, service: str):
         return self.cloudlets.create(name, service)
 
-    def register_batch_master(self, master: Any) -> None:
-        """Wire a :class:`repro.serving.batch.BatchMaster` into failure
-        handling (lost replicas re-issue) and the job-status API."""
-        if master not in self._batch_masters:
-            self._batch_masters.append(master)
+    def register_failure_listener(self, listener: Any) -> None:
+        """Wire a scheduler into the server's failure fan-out: its
+        ``on_host_failure(host_id, now)`` runs on every detected host
+        failure/leave, and — if it defines one — its ``job_status``
+        answers through :meth:`job_status`. Used by the batch tier
+        (:class:`repro.serving.batch.BatchMaster`, lost replicas
+        re-issue) and the elastic cell
+        (:class:`repro.serving.cell.ElasticServeCell`, re-shard)."""
+        if listener not in self._batch_masters:
+            self._batch_masters.append(listener)
+
+    # historical name, from when batch masters were the only listeners
+    register_batch_master = register_failure_listener
 
     # -------------------------------------------------- job service (work_creator)
     def submit_job(
@@ -439,7 +447,7 @@ class AdHocServer:
                 "restarts_from_zero": job.restarts_from_zero,
             }
         for master in self._batch_masters:
-            status = master.job_status(job_id)
+            status = getattr(master, "job_status", lambda _jid: None)(job_id)
             if status is not None:
                 return status
         return None

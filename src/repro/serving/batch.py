@@ -63,6 +63,9 @@ from dataclasses import dataclass, field
 from enum import Enum
 from typing import Any, Callable
 
+from repro.core.backoff import JitteredBackoff
+from repro.core.faults import FaultEvent, FaultPlan  # noqa: F401  (re-export:
+# FaultPlan grew up here before moving to core.faults; importers keep working)
 from repro.core.server import AdHocServer
 from repro.core.simulation import SimClock
 from repro.serving.engine import Request, ServeEngine
@@ -100,83 +103,6 @@ def result_digest(outputs: list[list[int]]) -> str:
     """Bitwise token-id digest of one replica's workunit result."""
     blob = json.dumps([[int(t) for t in toks] for toks in outputs])
     return hashlib.sha256(blob.encode()).hexdigest()[:32]
-
-
-# --------------------------------------------------------------------------
-# fault injection
-# --------------------------------------------------------------------------
-
-@dataclass
-class FaultEvent:
-    """One scheduled fault on the :class:`SimClock` timeline."""
-
-    at: float
-    kind: str            # "crash" | "slow" | "corrupt"
-    host: str
-    factor: float = 4.0  # slow: decode-time multiplier
-    count: int = 1       # corrupt: number of results to corrupt
-
-
-class FaultPlan:
-    """A deterministic, seeded trace of injected faults.
-
-    ``crash`` silences the host (its client stops polling and its worker
-    stops advancing — the availability checker's 2-minute rule is what
-    detects it, exactly as in §III-A). ``slow`` multiplies the host's
-    per-token decode time, driving it past workunit deadlines. ``corrupt``
-    flips a token in the host's next ``count`` reported results, so its
-    digest loses the quorum vote.
-    """
-
-    def __init__(self, events: list[FaultEvent]):
-        self.events = sorted(events, key=lambda e: (e.at, e.host, e.kind))
-        self._i = 0
-
-    def due(self, now: float) -> list[FaultEvent]:
-        """Events whose time has come (consumed; call with advancing now)."""
-        out = []
-        while self._i < len(self.events) and self.events[self._i].at <= now:
-            out.append(self.events[self._i])
-            self._i += 1
-        return out
-
-    @classmethod
-    def seeded(
-        cls,
-        hosts: list[str],
-        seed: int,
-        *,
-        kill_fraction: float = 0.25,
-        crash_window: tuple[float, float] = (10.0, 30.0),
-        n_slow: int = 1,
-        slow_factor: float = 8.0,
-        n_corrupt: int = 1,
-        corrupt_results: int = 1,
-    ) -> "FaultPlan":
-        """A churn trace over ``hosts``: ``ceil(kill_fraction * len)``
-        crashes inside ``crash_window``, plus ``n_slow`` slow hosts and
-        ``n_corrupt`` corrupters active from t=0. Targets are disjoint and
-        chosen by the seed, so the trace is reproducible byte-for-byte.
-        """
-        import numpy as np
-
-        rng = np.random.default_rng(seed)
-        order = [hosts[i] for i in rng.permutation(len(hosts))]
-        n_kill = max(1, int(np.ceil(len(hosts) * kill_fraction)))
-        events: list[FaultEvent] = []
-        it = iter(order)
-        lo, hi = crash_window
-        for _ in range(min(n_kill, len(order))):
-            events.append(FaultEvent(
-                at=float(rng.uniform(lo, hi)), kind="crash", host=next(it)))
-        for _ in range(n_slow):
-            events.append(FaultEvent(
-                at=0.0, kind="slow", host=next(it), factor=slow_factor))
-        for _ in range(n_corrupt):
-            events.append(FaultEvent(
-                at=0.0, kind="corrupt", host=next(it),
-                count=corrupt_results))
-        return cls(events)
 
 
 # --------------------------------------------------------------------------
@@ -235,7 +161,7 @@ class Workunit:
     hosts_rejected: set[str] = field(default_factory=set)  # outvoted digests
     canonical: str | None = None
     attempts: int = 0               # replicas ever issued
-    backoff_level: int = 0
+    backoff: JitteredBackoff | None = None
     next_issue_at: float = 0.0
     reissue_cause: str | None = None   # crash | timeout | quorum
     completed_at: float | None = None
@@ -464,10 +390,10 @@ class BatchMaster:
                           cause: str) -> None:
         """Exponential backoff before the transitioner may place fresh
         replicas of this workunit."""
-        delay = min(self.backoff_base_s * (2 ** wu.backoff_level),
-                    self.backoff_max_s)
-        wu.backoff_level += 1
-        wu.next_issue_at = max(wu.next_issue_at, now + delay)
+        if wu.backoff is None:
+            wu.backoff = JitteredBackoff(self.backoff_base_s,
+                                         self.backoff_max_s)
+        wu.next_issue_at = max(wu.next_issue_at, now + wu.backoff.next_delay())
         wu.reissue_cause = cause
         if wu.state == WuState.ACTIVE and not wu.active:
             wu.state = WuState.PENDING
@@ -766,6 +692,11 @@ class BatchMaster:
                 elif ev.kind == "corrupt":
                     self._corrupt_budget[ev.host] = (
                         self._corrupt_budget.get(ev.host, 0) + ev.count)
+                elif ev.kind == "rejoin":
+                    self._crashed.discard(ev.host)
+                    self._slow.pop(ev.host, None)
+                    if ev.host in self.server.hosts:
+                        self.server.host_returned(ev.host, now)
                 self.server._emit(now, "fault_injected", kind=ev.kind,
                                   host=ev.host)
             for h in self.server.cloudlets.members(self.cloudlet):

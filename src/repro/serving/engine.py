@@ -208,10 +208,15 @@ class ServeEngine:
         remote_pool: RemotePagePool | None = None,
         recall_budget: int = 8,
         decode_step_s: float = 5e-3,
+        active_cap: int | None = None,
     ):
         self.model = model
         self.params = params
         self.n_slots = n_slots
+        # elastic serving: a cell may cap concurrent decode lanes below
+        # n_slots when its survivor mesh shrinks (slots stay allocated so
+        # snapshots keep their shape; admission just stops above the cap)
+        self.active_cap = active_cap
         self.max_seq = max_seq
         if paged is None:
             paged = model.supports_paged
@@ -253,6 +258,9 @@ class ServeEngine:
             "cross_regions_computed": 0,  # encoder runs at admission
             "cross_regions_shared": 0,    # regions served from cached pages
             "cross_pages_shared": 0,      # pages those shared regions cover
+            # teacher-forced replay (elastic cell mid-stream resume)
+            "forced_tokens": 0,           # decode steps with a forced token
+            "forced_mismatches": 0,       # forced token != engine's argmax
         }
 
         if paged:
@@ -450,14 +458,37 @@ class ServeEngine:
     def pending(self) -> int:
         return len(self.queue) + sum(s is not None for s in self.slot_req)
 
+    def cancel(self, req_id: int) -> Request:
+        """Withdraw a request: dequeue it if waiting, release its slot
+        (freeing its private pages; shared pages just drop one ref) if
+        active. Returns the removed request — its ``generated`` tokens so
+        far stay on it, so a scheduler shedding load can report the
+        partial stream instead of silently dropping it."""
+        req = self.requests.pop(req_id)
+        if req in self.queue:
+            self.queue.remove(req)
+        if req.slot is not None:
+            self._release_slot(req.slot)
+            req.slot = None
+        return req
+
     def reset_stats(self) -> None:
         """Zero the counters (e.g. between a warmup and a measured pass)."""
         for k in self.stats:
             self.stats[k] = 0
 
-    def step(self) -> int:
+    def step(self, force_tokens: dict[int, int] | None = None) -> int:
         """Admit waiting requests, then advance every active slot by one
         token. Returns the number of active slots that generated.
+
+        ``force_tokens`` maps slot -> token id to **teacher-force** this
+        step: the slot's K/V is still written from its real last token
+        and the model's argmax is still computed (and compared — a
+        difference counts as a ``forced_mismatch``), but the *committed*
+        token is the forced one. The elastic cell uses this to replay a
+        resumed stream token-for-token: whatever the restored engine
+        would now sample, the tokens already streamed to the client are
+        what the cache is rebuilt from.
 
         Slots whose admission recalled spilled pages are **recall-held**
         for the simulated transfer time (``slot_hold`` decode steps): the
@@ -505,6 +536,12 @@ class ServeEngine:
         for i in active:
             req = self.requests[self.slot_req[i]]
             tok = int(next_tokens[i])
+            if force_tokens is not None and i in force_tokens:
+                forced = int(force_tokens[i])
+                self.stats["forced_tokens"] += 1
+                if forced != tok:
+                    self.stats["forced_mismatches"] += 1
+                tok = forced
             req.generated.append(tok)
             self.lengths[i] += 1
             self.last_token[i] = tok
@@ -528,6 +565,10 @@ class ServeEngine:
     # ----------------------------------------------------------------- admit
     def _admit(self) -> None:
         free = [i for i, r in enumerate(self.slot_req) if r is None]
+        if self.active_cap is not None:
+            headroom = self.active_cap - sum(
+                r is not None for r in self.slot_req)
+            free = free[:max(0, headroom)]
         while free and self.queue:
             if not self.paged:
                 req = self.queue.pop(0)

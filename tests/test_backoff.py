@@ -1,0 +1,77 @@
+"""The shared jittered-backoff helper (core/backoff.py)."""
+
+import pytest
+
+from repro.core.backoff import JitteredBackoff
+
+
+class TestDoubling:
+    def test_doubles_from_base(self):
+        b = JitteredBackoff(1.0, 64.0)
+        assert [b.next_delay() for _ in range(4)] == [1.0, 2.0, 4.0, 8.0]
+
+    def test_caps(self):
+        b = JitteredBackoff(2.0, 10.0)
+        delays = [b.next_delay() for _ in range(6)]
+        assert delays == [2.0, 4.0, 8.0, 10.0, 10.0, 10.0]
+        assert max(delays) <= 10.0
+
+    def test_peek_does_not_consume(self):
+        b = JitteredBackoff(1.0, 64.0)
+        assert b.peek() == b.peek() == 1.0
+        assert b.next_delay() == 1.0
+        assert b.peek() == 2.0
+
+
+class TestJitter:
+    def test_deterministic_under_seed(self):
+        a = JitteredBackoff(1.0, 64.0, jitter=0.5, seed=7)
+        b = JitteredBackoff(1.0, 64.0, jitter=0.5, seed=7)
+        assert [a.next_delay() for _ in range(6)] == \
+               [b.next_delay() for _ in range(6)]
+
+    def test_different_seeds_decorrelate(self):
+        a = JitteredBackoff(1.0, 1e9, jitter=0.5, seed=1)
+        b = JitteredBackoff(1.0, 1e9, jitter=0.5, seed=2)
+        assert [a.next_delay() for _ in range(8)] != \
+               [b.next_delay() for _ in range(8)]
+
+    def test_bounded_and_capped(self):
+        b = JitteredBackoff(1.0, 20.0, jitter=0.5, seed=3)
+        for level in range(12):
+            d = b.next_delay()
+            nominal = min(1.0 * 2 ** level, 20.0)
+            assert 0.5 * nominal <= d <= min(1.5 * nominal, 20.0)
+
+    def test_zero_jitter_is_exact(self):
+        b = JitteredBackoff(3.0, 100.0, jitter=0.0, seed=9)
+        assert [b.next_delay() for _ in range(3)] == [3.0, 6.0, 12.0]
+
+
+class TestReset:
+    def test_reset_on_success(self):
+        b = JitteredBackoff(1.0, 64.0)
+        for _ in range(5):
+            b.next_delay()
+        b.reset()
+        assert b.next_delay() == 1.0
+
+    def test_reset_replays_jitter_sequence(self):
+        b = JitteredBackoff(1.0, 64.0, jitter=0.3, seed=5)
+        first = [b.next_delay() for _ in range(4)]
+        b.reset()
+        assert [b.next_delay() for _ in range(4)] == first
+
+
+class TestValidation:
+    def test_rejects_bad_base_cap(self):
+        with pytest.raises(ValueError):
+            JitteredBackoff(0.0, 10.0)
+        with pytest.raises(ValueError):
+            JitteredBackoff(5.0, 1.0)
+
+    def test_rejects_bad_jitter(self):
+        with pytest.raises(ValueError):
+            JitteredBackoff(1.0, 10.0, jitter=1.0)
+        with pytest.raises(ValueError):
+            JitteredBackoff(1.0, 10.0, jitter=-0.1)

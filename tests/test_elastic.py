@@ -9,9 +9,16 @@ import os
 import subprocess
 import sys
 
+import jax
+import numpy as np
 import pytest
 
-from repro.checkpoint.elastic import plan_elastic_mesh
+from repro.checkpoint.elastic import (
+    gather_state,
+    make_elastic_mesh,
+    plan_elastic_mesh,
+    reshard_state,
+)
 
 REPO_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
@@ -110,3 +117,72 @@ class TestPlanElasticMesh:
         data, mp = plan_elastic_mesh(100, model_parallel=4)
         assert (data & (data - 1)) == 0  # power of two
         assert data * mp <= 100
+
+    def test_never_exceeds_devices(self):
+        # property sweep: the planned grid always fits the survivors
+        for n in range(1, 70):
+            for want_mp in (1, 2, 3, 4, 8, 16):
+                data, mp = plan_elastic_mesh(n, model_parallel=want_mp)
+                assert data >= 1 and mp >= 1, (n, want_mp)
+                assert data * mp <= n, (n, want_mp, data, mp)
+
+    def test_preserves_model_axis_when_possible(self):
+        # whenever a full model group survives, the model axis is intact
+        # (a model group is the unit of host loss)
+        for n in range(1, 70):
+            for want_mp in (1, 2, 4, 8):
+                _, mp = plan_elastic_mesh(n, model_parallel=want_mp)
+                if n >= want_mp:
+                    assert mp == want_mp, (n, want_mp, mp)
+                else:
+                    assert mp <= n, (n, want_mp, mp)
+
+
+class TestValidation:
+    def test_plan_rejects_zero_devices(self):
+        with pytest.raises(ValueError, match="surviving device"):
+            plan_elastic_mesh(0, model_parallel=2)
+
+    def test_plan_rejects_nonpositive_model_parallel(self):
+        # a bare assert would vanish under -O, and mp <= 0 degenerates
+        with pytest.raises(ValueError, match="model_parallel"):
+            plan_elastic_mesh(8, model_parallel=0)
+        with pytest.raises(ValueError, match="model_parallel"):
+            plan_elastic_mesh(8, model_parallel=-2)
+
+    def test_make_mesh_rejects_too_few_devices(self):
+        devs = jax.devices()
+        with pytest.raises(ValueError, match="plan_elastic_mesh"):
+            make_elastic_mesh(devs, 2, len(devs))
+
+    def test_make_mesh_rejects_bad_axes(self):
+        with pytest.raises(ValueError):
+            make_elastic_mesh(jax.devices(), 0, 1)
+
+
+class TestRoundTrip:
+    def test_reshard_gather_bitwise_on_mixed_pytree(self):
+        # params + paged-KV-shaped leaves of mixed dtypes survive a
+        # reshard -> gather cycle bit-for-bit (single-device (1,1) mesh;
+        # the shrinking-mesh variant runs in the slow subprocess test)
+        rng = np.random.default_rng(0)
+        state = {
+            "params": {
+                "w": rng.standard_normal((16, 32)).astype(np.float32),
+                "emb": rng.standard_normal((64, 16)).astype(np.float32),
+            },
+            "kv": rng.standard_normal((2, 8, 4, 2, 6)).astype(np.float32)
+                  .astype(jax.numpy.bfloat16),
+            "step": np.asarray(7, np.int32),
+        }
+        axes = {
+            "params": {"w": ("embed", "mlp"), "emb": ("vocab", "embed")},
+            "kv": ("layers", "pages", "page", "kv_heads", "head_dim"),
+            "step": (),
+        }
+        data, mp = plan_elastic_mesh(1, model_parallel=2)
+        mesh = make_elastic_mesh(jax.devices()[:1], data, mp)
+        back = gather_state(reshard_state(state, axes, mesh))
+        for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(back)):
+            assert np.asarray(a).dtype == np.asarray(b).dtype
+            assert np.asarray(a).tobytes() == np.asarray(b).tobytes()

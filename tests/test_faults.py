@@ -1,0 +1,62 @@
+"""The shared fault-injection layer (core/faults.py)."""
+
+from repro.core.faults import FaultEvent, FaultPlan
+
+
+class TestSeededTraces:
+    def test_deterministic_under_seed(self):
+        hosts = [f"h{i}" for i in range(9)]
+        a = FaultPlan.seeded(hosts, seed=3, n_rejoin=1)
+        b = FaultPlan.seeded(hosts, seed=3, n_rejoin=1)
+        assert [(e.at, e.kind, e.host) for e in a.events] == \
+               [(e.at, e.kind, e.host) for e in b.events]
+
+    def test_kill_fraction(self):
+        hosts = [f"h{i}" for i in range(8)]
+        plan = FaultPlan.seeded(hosts, seed=0, kill_fraction=0.25)
+        assert sum(e.kind == "crash" for e in plan.events) == 2
+
+    def test_targets_disjoint(self):
+        hosts = [f"h{i}" for i in range(10)]
+        plan = FaultPlan.seeded(hosts, seed=1, n_slow=2, n_corrupt=2)
+        targets = [e.host for e in plan.events]
+        assert len(targets) == len(set(targets))
+
+    def test_rejoin_revives_a_crashed_host_later(self):
+        hosts = [f"h{i}" for i in range(8)]
+        plan = FaultPlan.seeded(hosts, seed=2, n_rejoin=2,
+                                rejoin_delay=(5.0, 6.0))
+        crashes = {e.host: e.at for e in plan.events if e.kind == "crash"}
+        rejoins = [e for e in plan.events if e.kind == "rejoin"]
+        assert len(rejoins) == 2
+        for r in rejoins:
+            assert r.host in crashes
+            assert 5.0 <= r.at - crashes[r.host] <= 6.0
+
+    def test_rejoin_draws_do_not_change_base_trace(self):
+        # n_rejoin only appends events: pre-rejoin consumers of the same
+        # seed must see a byte-identical crash/slow/corrupt trace
+        hosts = [f"h{i}" for i in range(7)]
+        base = FaultPlan.seeded(hosts, seed=4, crash_window=(6.0, 14.0))
+        ext = FaultPlan.seeded(hosts, seed=4, crash_window=(6.0, 14.0),
+                               n_rejoin=1)
+        strip = [(e.at, e.kind, e.host) for e in ext.events
+                 if e.kind != "rejoin"]
+        assert strip == [(e.at, e.kind, e.host) for e in base.events]
+
+
+class TestDue:
+    def test_consumed_in_timeline_order(self):
+        plan = FaultPlan([
+            FaultEvent(at=5.0, kind="crash", host="b"),
+            FaultEvent(at=1.0, kind="slow", host="a"),
+            FaultEvent(at=9.0, kind="rejoin", host="b"),
+        ])
+        assert [e.host for e in plan.due(1.0)] == ["a"]
+        assert plan.due(1.0) == []
+        assert [e.kind for e in plan.due(10.0)] == ["crash", "rejoin"]
+
+    def test_batch_reexport(self):
+        # FaultPlan grew up in serving.batch; the old import path works
+        from repro.serving.batch import FaultEvent as FE, FaultPlan as FP
+        assert FE is FaultEvent and FP is FaultPlan
