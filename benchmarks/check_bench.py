@@ -1,0 +1,117 @@
+"""Assert the invariants each CI smoke scenario demands of
+``BENCH_SERVING.json``.
+
+The smoke jobs (one matrix job in ``.github/workflows/ci.yml``) run a
+tiny-config benchmark and then re-assert its recovery/parity counters
+from the JSON it wrote — so a silently-weakened bench still fails CI.
+Those assertions used to live as inline ``python - <<EOF`` blobs in the
+workflow, invisible to the test suite; they live here now, tier-1-tested
+by ``tests/test_check_bench.py``.
+
+    PYTHONPATH=src python -m benchmarks.check_bench SCENARIO [--json PATH]
+
+Scenarios: ``serving`` (token parity across every paged/prefix/spill/vlm
+row), ``batch-churn`` (quorum + timeout re-issue counters), ``cell-churn``
+(re-shard + mid-stream replay counters), ``latency`` (continuous-batching
+parity, sane TTFT/ITL percentiles, live preemption + shed counters).
+Exit status is non-zero on any violated invariant.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+DEFAULT_JSON = Path(__file__).resolve().parents[1] / "BENCH_SERVING.json"
+
+
+def _load_rows(path: str | Path) -> list[dict]:
+    rows = json.loads(Path(path).read_text())["rows"]
+    assert rows, "bench emitted no rows"
+    return rows
+
+
+def _only(rows: list[dict], bench: str) -> dict:
+    found = [r for r in rows if r.get("bench") == bench]
+    assert found, f"no '{bench}' row in the JSON"
+    return found[0]
+
+
+def check_serving(rows: list[dict]) -> str:
+    # rows from other scenarios (batch-churn, latency, ...) may share the
+    # merged JSON; only serving rows carry a "match" field
+    checked = [r for r in rows if r.get("match", "") != ""]
+    assert checked, "bench emitted no parity rows"
+    bad = [r for r in checked if r["match"] is not True]
+    assert not bad, f"token parity failed: {bad}"
+    scenarios = {r["bench"] for r in rows}
+    missing = {"serving", "serving-prefix", "serving-spill",
+               "serving-vlm"} - scenarios
+    assert not missing, f"scenarios missing from JSON: {missing}"
+    return (f"OK: {len(checked)} parity rows true across "
+            f"{sorted(scenarios)}")
+
+
+def check_batch_churn(rows: list[dict]) -> str:
+    row = _only(rows, "batch-churn")
+    assert row["parity"] is True, f"batch output diverged: {row}"
+    assert row["reissued"] > 0, f"churn bench saw no re-issues: {row}"
+    assert row["quorum_failures"] >= 1, f"no quorum rejection: {row}"
+    assert row["reissued_timeout"] >= 1, f"no timeout re-issue: {row}"
+    return (f"OK: parity with {row['reissued']} re-issues "
+            f"({row['hosts_killed']}/{row['hosts']} hosts killed)")
+
+
+def check_cell_churn(rows: list[dict]) -> str:
+    row = _only(rows, "cell-churn")
+    assert row["parity"] is True, f"a stream diverged or was lost: {row}"
+    assert row["hosts_killed"] * 4 >= row["hosts"], f"<25% killed: {row}"
+    assert row["resharded"] >= 1, f"no churn re-shard happened: {row}"
+    assert row["downtime_steps"] >= 1, f"no downtime recorded: {row}"
+    assert row["tokens_replayed"] >= 1, f"no mid-stream replay: {row}"
+    assert row["forced_mismatches"] == 0, f"replay diverged: {row}"
+    return (f"OK: parity after {row['resharded']} re-shards, "
+            f"{row['tokens_replayed']} tokens replayed "
+            f"({row['hosts_killed']}/{row['hosts']} hosts killed)")
+
+
+def check_latency(rows: list[dict]) -> str:
+    row = _only(rows, "latency")
+    assert row["parity"] is True, \
+        f"continuous batching changed tokens vs the reference: {row}"
+    for metric in ("ttft_ms", "itl_ms", "ref_ttft_ms", "ref_itl_ms"):
+        p50, p99 = row[f"{metric}_p50"], row[f"{metric}_p99"]
+        assert 0 < p50 <= p99, f"degenerate {metric} percentiles: {row}"
+    # the pressure phase must actually exercise the SLO machinery
+    assert row["preemptions"] >= 1, f"no preemption fired: {row}"
+    assert row["shed_expired"] >= 1, f"no deadline shed fired: {row}"
+    assert row["shed_overflow"] >= 1, f"no overflow shed fired: {row}"
+    assert row["resume_mismatches"] == 0, \
+        f"a preempted stream resumed off-token: {row}"
+    assert row["pressure_served"] >= 1, f"pressure run served nobody: {row}"
+    return (f"OK: parity over {row['n_requests']} reqs, ttft p99 "
+            f"{row['ttft_ms_p99']}ms, itl p99 {row['itl_ms_p99']}ms, "
+            f"{row['preemptions']} preemptions, "
+            f"{row['shed_expired'] + row['shed_overflow']} shed")
+
+
+CHECKS = {
+    "serving": check_serving,
+    "batch-churn": check_batch_churn,
+    "cell-churn": check_cell_churn,
+    "latency": check_latency,
+}
+
+
+def main(argv: list[str] | None = None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("scenario", choices=sorted(CHECKS))
+    ap.add_argument("--json", default=str(DEFAULT_JSON),
+                    help="path to BENCH_SERVING.json")
+    args = ap.parse_args(argv)
+    print(CHECKS[args.scenario](_load_rows(args.json)))
+
+
+if __name__ == "__main__":
+    main()

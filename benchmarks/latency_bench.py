@@ -1,0 +1,244 @@
+"""Latency benchmark (the ``latency`` row of BENCH_SERVING.json):
+iteration-level continuous batching under a deep queue.
+
+**Parity + latency phase.** A heavy-tailed workload (log-normal prompt
+and output lengths, 1000+ requests queued up front; ``REPRO_BENCH_TINY``
+shrinks it) drains through two engines over the same prompts:
+
+- ``continuous`` — the default scheduler: slots join and leave the
+  decode batch every iteration, prompts prefill in chunks under the
+  per-step token budget while decode lanes keep emitting;
+- the synchronous reference (``token_budget=None``) — whole prompts
+  prefill at admission, stalling every active lane for the duration.
+
+Time is simulated, not wall-clock: each engine step costs
+``STEP_MS_FIXED + STEP_MS_PER_TOKEN * last_step_tokens`` simulated
+milliseconds, so the schedulers are compared on the *schedules they
+build* (tokens moved per step) rather than on host noise. Reported per
+engine: p50/p99 time-to-first-token and p50/p99 inter-token latency.
+The continuous schedule must be **token-for-token identical** to the
+reference (``parity``) — greedy decode is schedule-independent, so
+continuous batching buys its tail latency with zero output drift.
+
+**Pressure phase.** A second, overloaded run (staggered arrivals above
+capacity, mixed priorities, tight TTFT deadlines on a slice, a bounded
+queue) exercises the SLO machinery end to end; its ``preemptions`` /
+``shed_expired`` / ``shed_overflow`` / ``resume_mismatches`` counters
+land in the same row. The CI latency-smoke job asserts parity, sane
+percentiles, active preemption/shedding, and zero resume mismatches
+via ``benchmarks.check_bench``.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import numpy as np
+
+TINY = bool(os.environ.get("REPRO_BENCH_TINY"))
+
+ARCH = "qwen3-8b"
+MAX_SEQ = 256
+PAGE_SIZE = 16
+PREFILL_CHUNK = 32
+N_SLOTS = 4 if TINY else 8
+TOKEN_BUDGET = 64
+
+# heavy-tailed request mix (log-normal lengths, clipped)
+N_REQS = 64 if TINY else 1000
+PROMPT_LOGNORM = (3.2, 0.8)          # median ~25 tokens, tail to the clip
+PROMPT_CLIP = (8, 192)
+OUT_LOGNORM = (2.3, 0.6)             # median ~10 tokens
+OUT_CLIP = (2, 48)
+
+# simulated clock: per-step fixed cost + per-token compute cost
+STEP_MS_FIXED = 2.0
+STEP_MS_PER_TOKEN = 0.05
+
+# pressure phase: arrivals above capacity on a small engine
+P_REQS = 48 if TINY else 160
+P_SLOTS = 2
+P_MAX_QUEUE = 6
+P_ARRIVALS_PER_STEP = 1.2            # ~2.4x the 0.5 req/step drain rate
+
+
+def _workload(cfg, seed):
+    rng = np.random.default_rng(seed)
+    mu, sig = PROMPT_LOGNORM
+    plens = np.clip(rng.lognormal(mu, sig, N_REQS).astype(int), *PROMPT_CLIP)
+    mu, sig = OUT_LOGNORM
+    nnew = np.clip(rng.lognormal(mu, sig, N_REQS).astype(int), *OUT_CLIP)
+    prompts = [rng.integers(1, cfg.vocab_size, n).tolist() for n in plens]
+    return prompts, nnew.tolist()
+
+
+def _drive(engine, reqs, max_steps=500_000):
+    """Drain the engine under the simulated clock; returns per-request
+    TTFT and inter-token latency samples in simulated milliseconds."""
+    clock = 0.0
+    ttft: dict[int, float] = {}
+    last_emit: dict[int, float] = {}
+    itl: list[float] = []
+    steps = 0
+    seen = {r.req_id: 0 for r in reqs}
+    while engine.pending() and steps < max_steps:
+        engine.step()
+        clock += STEP_MS_FIXED + STEP_MS_PER_TOKEN * engine.last_step_tokens
+        for r in reqs:
+            n = len(r.generated)
+            if n > seen[r.req_id]:
+                if r.req_id not in ttft:
+                    ttft[r.req_id] = clock
+                else:
+                    # tokens committed in the same step share a timestamp
+                    itl.extend([clock - last_emit[r.req_id]]
+                               * (n - seen[r.req_id]))
+                last_emit[r.req_id] = clock
+                seen[r.req_id] = n
+        steps += 1
+    assert not engine.pending(), f"engine stalled after {steps} steps"
+    return list(ttft.values()), itl, steps
+
+
+def _pct(xs, q):
+    return float(np.percentile(np.asarray(xs), q))
+
+
+def _latency_phase(rows_out, cfg, model, params):
+    from repro.serving.engine import ServeEngine
+    from repro.serving.scheduler import SchedulerConfig
+
+    prompts, nnew = _workload(cfg, seed=61)
+
+    def build(budget):
+        return ServeEngine(
+            model, params, n_slots=N_SLOTS, max_seq=MAX_SEQ, paged=True,
+            page_size=PAGE_SIZE, prefill_chunk=PREFILL_CHUNK,
+            scheduler=SchedulerConfig(token_budget=budget),
+        )
+
+    print(f"latency bench: {ARCH} (reduced), {N_REQS} queued reqs, "
+          f"{N_SLOTS} slots, token budget {TOKEN_BUDGET}, "
+          f"step = {STEP_MS_FIXED}ms + {STEP_MS_PER_TOKEN}ms/token (simulated)")
+    print(f"{'engine':>12} {'steps':>7} {'ttft p50':>9} {'ttft p99':>9} "
+          f"{'itl p50':>8} {'itl p99':>8} {'parity':>6}")
+
+    results = {}
+    for name, budget in (("continuous", TOKEN_BUDGET),
+                         ("synchronous", None)):
+        engine = build(budget)
+        # warmup: cover the decode batch + every chunk offset, compile-free
+        for p in prompts[:4]:
+            engine.submit(p, max_new_tokens=4)
+        engine.run(2000)
+        reqs = [engine.submit(p, max_new_tokens=int(n))
+                for p, n in zip(prompts, nnew)]
+        ttft, itl, steps = _drive(engine, reqs)
+        results[name] = {
+            "reqs": sorted(reqs, key=lambda r: r.req_id),
+            "ttft": ttft, "itl": itl, "steps": steps,
+        }
+
+    parity = all(
+        a.generated == b.generated
+        for a, b in zip(results["continuous"]["reqs"],
+                        results["synchronous"]["reqs"])
+    )
+    for name, r in results.items():
+        print(f"{name:>12} {r['steps']:>7} {_pct(r['ttft'], 50):>9.1f} "
+              f"{_pct(r['ttft'], 99):>9.1f} {_pct(r['itl'], 50):>8.2f} "
+              f"{_pct(r['itl'], 99):>8.2f} "
+              f"{str(parity) if name == 'continuous' else '':>6}")
+
+    cont, sync = results["continuous"], results["synchronous"]
+    print(f"       itl p99: {_pct(cont['itl'], 99):.2f}ms continuous vs "
+          f"{_pct(sync['itl'], 99):.2f}ms synchronous (same tokens)")
+    rows_out.update({
+        "n_requests": N_REQS, "slots": N_SLOTS,
+        "token_budget": TOKEN_BUDGET,
+        "ttft_ms_p50": round(_pct(cont["ttft"], 50), 2),
+        "ttft_ms_p99": round(_pct(cont["ttft"], 99), 2),
+        "itl_ms_p50": round(_pct(cont["itl"], 50), 3),
+        "itl_ms_p99": round(_pct(cont["itl"], 99), 3),
+        "ref_ttft_ms_p50": round(_pct(sync["ttft"], 50), 2),
+        "ref_ttft_ms_p99": round(_pct(sync["ttft"], 99), 2),
+        "ref_itl_ms_p50": round(_pct(sync["itl"], 50), 3),
+        "ref_itl_ms_p99": round(_pct(sync["itl"], 99), 3),
+        "parity": parity,
+    })
+
+
+def _pressure_phase(rows_out, cfg, model, params):
+    from repro.serving.engine import ServeEngine
+    from repro.serving.scheduler import SchedulerConfig
+
+    engine = ServeEngine(
+        model, params, n_slots=P_SLOTS, max_seq=MAX_SEQ, paged=True,
+        page_size=PAGE_SIZE, prefill_chunk=PREFILL_CHUNK,
+        scheduler=SchedulerConfig(token_budget=TOKEN_BUDGET,
+                                  max_queue=P_MAX_QUEUE),
+    )
+    rng = np.random.default_rng(71)
+    specs = []
+    t = 0.0
+    for _ in range(P_REQS):
+        t += rng.exponential(1.0 / P_ARRIVALS_PER_STEP)
+        prio = int(rng.choice([0, 0, 0, 0, 1, 3]))   # mostly batch, some SLO
+        ddl = float(rng.integers(20, 60)) if rng.random() < 0.3 else None
+        specs.append((int(t), rng.integers(1, cfg.vocab_size,
+                                           int(rng.integers(8, 40))).tolist(),
+                      int(rng.integers(4, 16)), prio, ddl))
+
+    reqs, i, steps = [], 0, 0
+    while (i < len(specs) or engine.pending()) and steps < 100_000:
+        while i < len(specs) and specs[i][0] <= steps:
+            _, prompt, nnew, prio, ddl = specs[i]
+            reqs.append(engine.submit(prompt, max_new_tokens=nnew,
+                                      priority=prio, deadline_ms=ddl))
+            i += 1
+        engine.step()
+        steps += 1
+    assert not engine.pending(), f"pressure run stalled after {steps} steps"
+
+    s = engine.stats
+    done = sum(r.done for r in reqs)
+    shed = sum(r.shed for r in reqs)
+    assert done + shed == len(reqs)
+    print(f"\npressure phase: {P_REQS} arrivals over {steps} steps on "
+          f"{P_SLOTS} slots (queue bound {P_MAX_QUEUE}): "
+          f"{done} served, {shed} shed")
+    print(f"       preemptions {s['preemptions']}, "
+          f"shed_expired {s['shed_expired']}, "
+          f"shed_overflow {s['shed_overflow']}, "
+          f"resume_mismatches {s['resume_mismatches']}")
+    rows_out.update({
+        "pressure_requests": P_REQS, "pressure_served": done,
+        "preemptions": s["preemptions"],
+        "shed_expired": s["shed_expired"],
+        "shed_overflow": s["shed_overflow"],
+        "resume_mismatches": s["resume_mismatches"],
+    })
+
+
+def main(rows=None) -> list[dict]:
+    rows = rows if rows is not None else []
+    from repro.configs import REDUCED
+    from repro.models import get_model
+
+    from benchmarks.serving_bench import write_json
+
+    cfg = REDUCED[ARCH]
+    model = get_model(cfg)
+    params = model.init(jax.random.key(0))
+
+    row = {"bench": "latency", "engine": "continuous"}
+    _latency_phase(row, cfg, model, params)
+    _pressure_phase(row, cfg, model, params)
+    rows.append(row)
+    write_json([row])
+    return rows
+
+
+if __name__ == "__main__":
+    main()

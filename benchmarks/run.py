@@ -29,6 +29,13 @@ Sections:
                  mid-stream replay + priority shedding (the ``cell-churn``
                  row of BENCH_SERVING.json; run
                  `python -m benchmarks.cell_bench --cell-churn` standalone)
+- latency      — iteration-level continuous batching under a deep
+                 heavy-tailed queue: p50/p99 TTFT and inter-token latency
+                 on a simulated clock, token-for-token parity vs the
+                 synchronous reference, plus an overload pressure phase
+                 exercising preemption and shedding (the ``latency`` row
+                 of BENCH_SERVING.json; run
+                 `python -m benchmarks.latency_bench` standalone)
 """
 
 import argparse
@@ -36,7 +43,7 @@ import csv
 
 
 SECTIONS = ["reliability", "performance", "snapshot", "straggler",
-            "kernel", "roofline", "serving", "batch", "cell"]
+            "kernel", "roofline", "serving", "batch", "cell", "latency"]
 
 
 def main() -> None:
@@ -70,6 +77,8 @@ def main() -> None:
                 from benchmarks import batch_bench as m
             elif name == "cell":
                 from benchmarks import cell_bench as m
+            elif name == "latency":
+                from benchmarks import latency_bench as m
             m.main(rows)
         except Exception as e:  # keep the harness running
             print(f"SECTION FAILED: {name}: {type(e).__name__}: {e}")

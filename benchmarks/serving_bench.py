@@ -75,7 +75,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.serving.scheduler import SchedulerConfig
+
 TINY = bool(os.environ.get("REPRO_BENCH_TINY"))
+
+# this bench measures per-admission latency by timing _prefill_paged,
+# which under continuous batching only *begins* a prefill — so every
+# engine here pins the synchronous reference scheduler. The continuous
+# path (TTFT/ITL under load) is benchmarks/latency_bench.py's job.
+def _sync_sched():
+    return SchedulerConfig(token_budget=None)
 
 ARCH = "qwen3-8b"
 MAX_SEQ = 1024
@@ -218,7 +227,8 @@ def _paged_scenario(rows, cfg, model, params) -> None:
 
         results = {}
         for kind in ("dense", "paged"):
-            kw = dict(n_slots=n_slots, max_seq=MAX_SEQ)
+            kw = dict(n_slots=n_slots, max_seq=MAX_SEQ,
+                      scheduler=_sync_sched())
             if kind == "paged":
                 kw.update(paged=True, page_size=PAGE_SIZE, n_pages=n_pages,
                           prefill_chunk=PREFILL_CHUNK)
@@ -292,7 +302,7 @@ def _prefix_share_scenario(rows, cfg, model, params) -> None:
             engine = ServeEngine(
                 model, params, n_slots=PS_SLOTS, max_seq=MAX_SEQ, paged=True,
                 page_size=PAGE_SIZE, prefill_chunk=PREFILL_CHUNK,
-                prefix_share=share,
+                prefix_share=share, scheduler=_sync_sched(),
             )
             # warmup covers every chunk offset (compile-free measured pass);
             # seed differs, so the measured pass starts with a cold prefix
@@ -385,7 +395,8 @@ def _vlm_paged_scenario(rows) -> None:
     exact = {}
     results = {}
     for kind in ("dense", "paged"):
-        kw = dict(n_slots=VLM_SLOTS, max_seq=MAX_SEQ)
+        kw = dict(n_slots=VLM_SLOTS, max_seq=MAX_SEQ,
+                  scheduler=_sync_sched())
         if kind == "paged":
             kw.update(paged=True, page_size=PAGE_SIZE, n_pages=n_pages,
                       prefill_chunk=PREFILL_CHUNK)
@@ -470,7 +481,7 @@ def _spill_scenario(rows, cfg, model, params) -> None:
         return ServeEngine(model, params, n_slots=SP_SLOTS, max_seq=MAX_SEQ,
                            paged=True, page_size=P,
                            prefill_chunk=PREFILL_CHUNK, n_pages=n_pages,
-                           remote_pool=rp_pool)
+                           remote_pool=rp_pool, scheduler=_sync_sched())
 
     engines = {
         "paged": eng(n_small),

@@ -50,6 +50,11 @@ class CloudJob:
     cloudlet: str
     work_units: float
     submitted_at: float
+    # SLO routing (mirrors the serving scheduler's request fields): higher
+    # priority is placed first; a deadline (absolute sim-time by which the
+    # job must have *started*) breaks ties within a priority tier
+    priority: int = 0
+    deadline_s: float | None = None
     state: JobState = JobState.QUEUED
     assigned_host: str | None = None
     guest_id: str | None = None
@@ -177,7 +182,8 @@ class AdHocServer:
 
     # -------------------------------------------------- job service (work_creator)
     def submit_job(
-        self, cloudlet: str, work_units: float, now: float, payload: Any = None
+        self, cloudlet: str, work_units: float, now: float, payload: Any = None,
+        *, priority: int = 0, deadline_s: float | None = None,
     ) -> str:
         """On-the-fly job submission (the work_creator daemon's product)."""
         assert cloudlet in self.cloudlets, f"unknown cloudlet {cloudlet!r}"
@@ -185,6 +191,7 @@ class AdHocServer:
         self.jobs[job_id] = CloudJob(
             job_id=job_id, cloudlet=cloudlet, work_units=work_units,
             submitted_at=now, payload=payload,
+            priority=priority, deadline_s=deadline_s,
         )
         self._emit(now, "job_submitted", job=job_id, cloudlet=cloudlet)
         # Job Service notifies VM Service that a cloud job exists (§III-A)
@@ -206,12 +213,24 @@ class AdHocServer:
     def schedule(self, now: float) -> list[tuple[str, str]]:
         """Assign queued jobs to the most reliable ready hosts (§III-B).
 
+        Queued jobs are considered in SLO order — priority descending,
+        earliest deadline, then submission order — the job-granularity
+        analogue of the serving scheduler's admission order
+        (:mod:`repro.serving.scheduler`), so a scarce ready host goes to
+        the most urgent job, not the oldest dict entry.
+
         Returns [(job_id, host_id)] assignments made this pass.
         """
         out = []
-        for job in self.jobs.values():
-            if job.state != JobState.QUEUED:
-                continue
+        queued = sorted(
+            (j for j in self.jobs.values() if j.state == JobState.QUEUED),
+            key=lambda j: (
+                -j.priority,
+                j.deadline_s if j.deadline_s is not None else float("inf"),
+                j.submitted_at, j.job_id,
+            ),
+        )
+        for job in queued:
             ready = self._ready_hosts(job.cloudlet)
             if not ready:
                 continue

@@ -63,6 +63,7 @@ from repro.serving.batch import (
     result_digest,
 )
 from repro.serving.engine import Request, ServeEngine
+from repro.serving.scheduler import Scheduler, SchedulerConfig
 from repro.serving.kvcache import (
     PagePool,
     PrefixIndex,
@@ -76,7 +77,8 @@ from repro.serving.kvcache import (
     scatter_slot,
 )
 
-__all__ = ["ServeEngine", "Request", "PagePool", "PrefixIndex",
+__all__ = ["ServeEngine", "Request", "Scheduler", "SchedulerConfig",
+           "PagePool", "PrefixIndex",
            "RemotePagePool", "SpilledPage",
            "init_cache", "init_paged_cache", "pages_needed", "scatter_slot",
            "cache_shardings", "paged_cache_shardings",

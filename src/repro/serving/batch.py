@@ -70,6 +70,7 @@ from repro.core.server import AdHocServer
 from repro.core.simulation import SimClock
 from repro.serving.engine import Request, ServeEngine
 from repro.serving.kvcache import pages_needed
+from repro.serving.scheduler import SchedulerConfig
 
 EngineFactory = Callable[[str], ServeEngine]
 
@@ -82,7 +83,15 @@ def make_engine_factory(model, params, **engine_kwargs) -> EngineFactory:
     its workunit's prompts), but ``jax.jit`` wrappers are shared across
     engines of one factory, so the model compiles once per shape — not
     once per host.
+
+    Batch replicas default to the *synchronous* scheduler: a workunit is
+    decoded for throughput and validated by hash quorum — whole-prompt
+    admission maximizes tokens per step and keeps the step-count timeout
+    accounting stable. The interactive tiers (engine default, cell) own
+    continuous batching; pass ``scheduler=`` to override.
     """
+    engine_kwargs.setdefault("scheduler",
+                             SchedulerConfig(token_budget=None))
     shared: dict[str, Any] = {}
     jitted = ("_decode_paged", "_prefill_chunk", "_copy_pages",
               "_install_page", "_prefill_cross",      # paged path

@@ -76,6 +76,7 @@ from repro.core.simulation import SimClock
 from repro.parallel.partition import activation_sharding, tree_partition_specs
 from repro.serving.batch import EngineFactory, make_engine_factory
 from repro.serving.engine import ServeEngine
+from repro.serving.scheduler import SchedulerConfig
 from repro.serving.kvcache import paged_cache_shardings
 
 Pytree = Any
@@ -166,6 +167,12 @@ class ElasticServeCell:
         # a caller-supplied factory lets many cells (or a cell and its
         # parity reference) share one set of jitted kernels
         self._engine_kwargs = dict(engine_kwargs or {})
+        # the cell owns its capacity policy (active_cap + priority-ordered
+        # cancel on re-shard); engine-level preemption underneath the
+        # teacher-forced replay would only reshuffle slots mid-replay, so
+        # cell engines keep continuous batching but disable preemption
+        self._engine_kwargs.setdefault(
+            "scheduler", SchedulerConfig(preempt_margin=None))
         self.factory: EngineFactory = factory or make_engine_factory(
             model, params, **self._engine_kwargs)
         self.engine: ServeEngine | None = None
@@ -219,7 +226,7 @@ class ElasticServeCell:
         if self.engine is not None:
             cr.engine_id = self.engine.submit(
                 cr.prompt, max_new_tokens=max_new_tokens,
-                eos_id=eos_id).req_id
+                eos_id=eos_id, priority=priority).req_id
         return cr
 
     def unfinished(self) -> int:
@@ -580,7 +587,7 @@ class ElasticServeCell:
             if er is None:
                 cr.engine_id = eng.submit(
                     cr.prompt, max_new_tokens=cr.max_new_tokens,
-                    eos_id=cr.eos_id).req_id
+                    eos_id=cr.eos_id, priority=cr.priority).req_id
 
     def _apply_capacity(self, now: float) -> int:
         """Graceful degradation: cap concurrent lanes at what the

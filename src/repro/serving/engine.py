@@ -14,6 +14,22 @@ completion; when the pool is exhausted, requests simply wait in the queue.
 Decode advances all active slots through one batched ``decode_paged`` step
 using the paged flash-decode kernel.
 
+**Iteration-level continuous batching** (the default): slots join and
+leave the decode batch every step. Admission *begins* a prefill (pages
+allocated, slot bound) and its chunks are pumped across subsequent steps
+under a per-step token budget — each decode lane reserves one token, the
+remainder goes to prefill — so a burst of long prompts cannot stall
+in-flight decodes. The policy (admission order with priority aging, TTFT
+deadlines, bounded cached-prefix bypass, preemption of the weakest active
+slot back to the queue, load shedding) lives in
+:mod:`repro.serving.scheduler`; ``scheduler=SchedulerConfig(
+token_budget=None)`` selects the legacy synchronous mode (whole prompt
+prefilled inside the admission call), kept as the non-continuous
+reference for latency benchmarks. Preemption is token-exact: the victim's
+pages are registered in the prefix trie, its committed tokens (minus the
+last) become a ``resume`` suffix re-prefilled on re-admission, and greedy
+determinism re-derives the final committed token.
+
 **Prefix sharing (copy-on-write)**: the engine keeps a
 :class:`~repro.serving.kvcache.PrefixIndex` — a trie mapping page-aligned
 token prefixes to resident page chains. Admission looks up the longest
@@ -85,6 +101,7 @@ import numpy as np
 
 from repro.checkpoint.serializer import deserialize_tree, serialize_tree
 from repro.models.model_api import ModelFns
+from repro.serving.scheduler import Scheduler, SchedulerConfig
 from repro.serving.kvcache import (
     PagePool,
     PrefixIndex,
@@ -126,6 +143,15 @@ class Request:
     max_new_tokens: int
     eos_id: int | None = None
     extra: dict = field(default_factory=dict)   # modality inputs (frames/embeds)
+    # SLO scheduling (see repro.serving.scheduler): higher priority wins;
+    # deadline_ms is a TTFT budget in simulated milliseconds from submission
+    priority: int = 0
+    deadline_ms: float | None = None
+    arrival_step: int = 0
+    # preemption: committed tokens (all but the last) re-prefilled after the
+    # prompt on re-admission, so a preempted stream resumes token-exactly
+    resume: list[int] = field(default_factory=list)
+    shed: bool = False     # dropped by the scheduler, not completed
     generated: list[int] = field(default_factory=list)
     slot: int | None = None
     done: bool = False
@@ -190,6 +216,26 @@ def _install_page(cache: Pytree, dst: jax.Array, vals: Pytree) -> Pytree:
     }
 
 
+@dataclass
+class _PrefillTask:
+    """One admission's chunked prefill, in flight across engine steps
+    (iteration-level continuous batching). The slot's pages are allocated
+    and its request bound when the task is created; the slot's page-table
+    *row* stays on the scratch page until the last chunk lands, so the
+    batched decode's inert write for this lane can never scribble on real
+    (possibly shared) pages — chunks write through a private row built
+    from ``slot_pages`` instead."""
+
+    req: Request
+    tlen: int                    # mm + prompt + resume positions
+    mm: int                      # inline modality positions (vlm)
+    ptoks: list[int]             # prompt + resume (text positions)
+    offset: int                  # next position to compute
+    key_tokens: list[int]        # trie keys registered at completion
+    embeds: Any | None = None    # (mm, d) image rows, vlm only
+    logits: Any | None = None    # last chunk's logits (first-token source)
+
+
 class ServeEngine:
     def __init__(
         self,
@@ -209,6 +255,7 @@ class ServeEngine:
         recall_budget: int = 8,
         decode_step_s: float = 5e-3,
         active_cap: int | None = None,
+        scheduler: SchedulerConfig | None = None,
     ):
         self.model = model
         self.params = params
@@ -217,6 +264,15 @@ class ServeEngine:
         # n_slots when its survivor mesh shrinks (slots stay allocated so
         # snapshots keep their shape; admission just stops above the cap)
         self.active_cap = active_cap
+        # SLO policy: admission order, aging, bypass, preemption, shedding,
+        # and the per-step token budget (None budget = legacy synchronous)
+        self.sched = Scheduler(scheduler, decode_step_s=decode_step_s)
+        # slot -> in-flight chunked prefill (continuous batching only; the
+        # synchronous mode drains each task within its admission call)
+        self.prefilling: dict[int, _PrefillTask] = {}
+        self.last_step_tokens = 0  # decode lanes + prefill chunk tokens
+        self._step_prefill_tokens = 0  # chunk tokens since the last _admit
+        self._has_deadlines = False
         self.max_seq = max_seq
         if paged is None:
             paged = model.supports_paged
@@ -261,6 +317,11 @@ class ServeEngine:
             # teacher-forced replay (elastic cell mid-stream resume)
             "forced_tokens": 0,           # decode steps with a forced token
             "forced_mismatches": 0,       # forced token != engine's argmax
+            # SLO scheduler (continuous batching)
+            "preemptions": 0,             # active slots sent back to queue
+            "shed_expired": 0,            # waiting requests past deadline
+            "shed_overflow": 0,           # waiting requests over max_queue
+            "resume_mismatches": 0,       # resumed recompute != committed
         }
 
         if paged:
@@ -300,7 +361,6 @@ class ServeEngine:
             self.prefix_share = enabled and model.supports_prefix_sharing
             self.prefix_index = PrefixIndex(page_size)
             self._phantom_next = self.n_pages  # bookkeeping-only node ids
-            self._head_skips = 0  # fairness bound for prefix-aware admission
             # spill tier: lend cold cached pages to neighbor hosts instead
             # of evicting them (only meaningful with page-addressable
             # prefix sharing — recurrent state cannot be lent page-wise)
@@ -382,6 +442,27 @@ class ServeEngine:
             req.key_cache["key_tokens"] = ks
         return req.key_cache["key_tokens"]
 
+    def _gen_keys(self, req: Request, toks: list[int]) -> list[int]:
+        """Trie keys for *generated* tokens (preemption resume / the pages
+        a preempted slot leaves behind): plain token ids, salted with the
+        frames digest for enc-dec exactly like the prompt keys."""
+        if self.cross and "frames" in req.extra:
+            salt = self._frames_salt(req)
+            return [t + ((salt + 1) << _SALT_SHIFT) for t in toks]
+        return list(toks)
+
+    def _admit_keys(self, req: Request) -> list[int]:
+        """Trie key sequence for admission: the prompt keys plus one key
+        per ``resume`` token (a preempted request re-prefills its
+        committed tokens, so its cache positions extend past the prompt).
+        Memoized until the resume suffix changes."""
+        if "admit_keys" not in req.key_cache:
+            ks = self._key_tokens(req)
+            if req.resume:
+                ks = ks + self._gen_keys(req, req.resume)
+            req.key_cache["admit_keys"] = ks
+        return req.key_cache["admit_keys"]
+
     def _cross_keys(self, req: Request) -> list[int]:
         """Trie key sequence for the encoder-output region: one content
         pseudo-token per frame, padded to a page multiple with a sentinel
@@ -406,7 +487,9 @@ class ServeEngine:
 
     # ------------------------------------------------------------- interface
     def submit(self, prompt: list[int], *, max_new_tokens: int = 16,
-               eos_id: int | None = None, extra: dict | None = None) -> Request:
+               eos_id: int | None = None, extra: dict | None = None,
+               priority: int = 0,
+               deadline_ms: float | None = None) -> Request:
         extra = dict(extra or {})
         probe = Request(-1, list(prompt), max_new_tokens, eos_id, extra)
         allowed = ({"embeds"} if self._mm else set()) | (
@@ -447,7 +530,10 @@ class ServeEngine:
                     f"{self.n_pages - 1} allocatable pages"
                 )
         req = Request(self._req_counter, list(prompt), max_new_tokens, eos_id,
-                      extra)
+                      extra, priority=priority, deadline_ms=deadline_ms,
+                      arrival_step=self.steps)
+        if deadline_ms is not None:
+            self._has_deadlines = True
         self._req_counter += 1
         self.requests[req.req_id] = req
         self.queue.append(req)
@@ -498,21 +584,48 @@ class ServeEngine:
         still rides through the batched kernel — its K/V write is
         idempotent (same token, same position as its first real step) and
         its logits are discarded.
+
+        With a continuous-batching scheduler (the default: see
+        :mod:`repro.serving.scheduler`) each step additionally sheds
+        expired/overflow load, admits under the SLO admission order,
+        advances in-flight prefill chunks under the step's token budget
+        (decode lanes reserve one token each; leftover budget goes to
+        prefill), and preempts the weakest active slot when a blocked
+        waiting request outranks it — slots join and leave the decode
+        batch every iteration. ``last_step_tokens`` records the step's
+        decode + prefill token total for budget accounting.
         """
-        self._admit()
+        if self.paged and not self.sched.cfg.synchronous:
+            self._shed_pass()
+            self._admission_scan()
+            lanes = sum(
+                1 for i, r in enumerate(self.slot_req)
+                if r is not None and i not in self.prefilling
+                and not self.slot_hold[i]
+            )
+            prefill_used = self._pump_prefill(
+                self.sched.prefill_budget(lanes, bool(self.prefilling))
+            )
+            self._preempt_pass()
+        else:
+            prefill_used = self._admit()
         if self.paged:
             held = self.slot_hold > 0
             active = [i for i, r in enumerate(self.slot_req)
-                      if r is not None and not held[i]]
+                      if r is not None and not held[i]
+                      and i not in self.prefilling]
             self.slot_hold[held] -= 1  # transfers progress as time passes
             if not active:
-                if np.any(held):
-                    self.steps += 1  # recall wait: time passes, no tokens
+                if np.any(held) or self.prefilling:
+                    # recall waits drain / chunks ran: time passes
+                    self.steps += 1
+                self.last_step_tokens = prefill_used
                 return 0
         else:
             active = [i for i, r in enumerate(self.slot_req)
                       if r is not None]
         if not active:
+            self.last_step_tokens = prefill_used
             return 0
         tokens = jnp.asarray(self.last_token)[:, None]
         positions = jnp.asarray(self.lengths)
@@ -554,6 +667,7 @@ class ServeEngine:
                 req.slot = None
                 self._release_slot(i)
         self.steps += 1
+        self.last_step_tokens = prefill_used + len(active)
         return len(active)
 
     def run(self, max_steps: int = 10_000) -> list[Request]:
@@ -563,40 +677,184 @@ class ServeEngine:
         return [r for r in self.requests.values() if r.done]
 
     # ----------------------------------------------------------------- admit
-    def _admit(self) -> None:
+    def _admit(self) -> int:
+        """Synchronous admission entry point: one shed + admission pass,
+        then drain any in-flight prefills to completion regardless of the
+        token budget. ``step()`` uses it when the scheduler is
+        synchronous; the elastic cell calls it directly before replay so
+        a restored engine admits exactly as the snapshotted one did.
+        Returns the prefill tokens computed (including drains that ran
+        inside the admission scan), so the synchronous mode's
+        ``last_step_tokens`` accounts admission stalls like the
+        continuous mode does (the latency bench's simulated clock)."""
+        self._step_prefill_tokens = 0
+        self._shed_pass()
+        self._admission_scan()
+        if self.paged and self.prefilling:
+            self._pump_prefill(None)
+        return self._step_prefill_tokens
+
+    def _admission_scan(self) -> None:
+        """Admit waiting requests into free slots in the scheduler's
+        order (effective priority desc, earliest deadline, FIFO among
+        peers). Under page pressure a lower-ranked request whose cached
+        prefix shrinks its private-page need may be admitted past a
+        blocked higher-ranked one — but only while the blocked request's
+        aged effective-priority lead stays below ``bypass_margin``: the
+        blocked request ages while bypass candidates keep arriving fresh,
+        so bypass shuts off after a bounded wait and freed pages
+        accumulate for it. (The old fixed-skip-count rule reset on every
+        admission and could starve an oversized head indefinitely under a
+        steady prefix-hit stream.)"""
         free = [i for i, r in enumerate(self.slot_req) if r is None]
         if self.active_cap is not None:
             headroom = self.active_cap - sum(
                 r is not None for r in self.slot_req)
             free = free[:max(0, headroom)]
-        while free and self.queue:
-            if not self.paged:
-                req = self.queue.pop(0)
+        if not self.paged:
+            while free and self.queue:
+                req = self.sched.order(self.queue, self.steps)[0]
+                self.queue.remove(req)
                 self._prefill_into(free.pop(0), req)
-                continue
+            return
+        while free and self.queue:
             if not self._admit_ready:
                 return  # nothing changed since the last failed scan
-            # prefix-aware admission: FIFO order first. Under page
-            # pressure a later request may be admitted past the waiting
-            # head, but only if its cached prefix shrinks its private-page
-            # need, and only a bounded number of times per head — freed
-            # pages then accumulate for the head, so it cannot starve.
+            ranked = self.sched.order(self.queue, self.steps)
             admitted = False
-            for qi, req in enumerate(self.queue):
-                if qi > 0 and self._head_skips >= 4 * self.n_slots:
+            deferred = False
+            blocked: Request | None = None
+            attempts = 0
+            for req in ranked:
+                if attempts >= self.sched.cfg.scan_limit:
                     break
+                if blocked is not None and not self.sched.may_bypass(
+                        blocked, req, self.steps):
+                    break  # ranked order: later candidates' leads only grow
+                attempts += 1
+                if self._await_inflight_prefix(req):
+                    deferred = True
+                    continue
                 if self._try_admit_paged(free[0], req,
-                                         require_shared=qi > 0):
-                    self.queue.pop(qi)
+                                         require_shared=blocked is not None):
+                    self.queue.remove(req)
                     free.pop(0)
-                    self._head_skips = self._head_skips + 1 if qi else 0
                     admitted = True
                     break
+                if blocked is None:
+                    blocked = req
             if not admitted:
-                # don't rescan (O(queue) trie lookups) until a completion
-                # frees pages or a new request arrives
-                self._admit_ready = False
+                if not deferred:
+                    # don't rescan (O(queue) trie lookups) until a
+                    # completion frees pages or a new request arrives;
+                    # deferred candidates rescan next step — their source
+                    # prefill is about to register
+                    self._admit_ready = False
                 return
+
+    def _await_inflight_prefix(self, req: Request) -> bool:
+        """True when a still-prefilling slot will register a longer
+        usable prefix for this request than the trie holds right now.
+        Pages enter the trie only once their content exists, so admitting
+        such a request immediately would forfeit the sharing and prefill
+        the duplicate prefix from scratch; deferring it a step (until the
+        source task finishes and registers) keeps burst arrivals of a
+        shared prefix paying its FLOPs once."""
+        if not self.prefix_share or not self.prefilling:
+            return False
+        keys = self._admit_keys(req)
+        best = 0
+        for task in self.prefilling.values():
+            m = 0
+            for a, b in zip(keys, task.key_tokens):
+                if a != b:
+                    break
+                m += 1
+            best = max(best, m // self.page_size)
+        if not best:
+            return False
+        return best > len(self.prefix_index.lookup(keys))
+
+    # ------------------------------------------------------- shed / preempt
+    def _shed_pass(self) -> None:
+        """Degrade instead of queueing unboundedly: drop waiting requests
+        whose TTFT deadline already passed, then the lowest-ranked tail
+        beyond ``max_queue``. Shed requests are cancelled with their
+        ``shed`` flag set, so callers can tell drop from completion."""
+        if not self.queue:
+            return
+        if self._has_deadlines:
+            for req in list(self.queue):
+                if (req.deadline_ms is not None
+                        and self.sched.expired(req, self.steps)):
+                    self._shed(req, "shed_expired")
+        if self.sched.cfg.max_queue is not None:
+            for req in self.sched.overflow(self.queue, self.steps):
+                self._shed(req, "shed_overflow")
+
+    def _shed(self, req: Request, counter: str) -> None:
+        req.shed = True
+        self.cancel(req.req_id)
+        self.stats[counter] += 1
+
+    def preempt(self, req_id: int) -> Request:
+        """Preempt an active decode slot back to the waiting queue,
+        token-exactly.
+
+        The committed stream is split: ``generated[:-1]`` becomes the
+        request's ``resume`` suffix (re-prefilled after the prompt on
+        re-admission) and the final committed token is re-derived from
+        the recomputed logits — greedy decode is deterministic, so the
+        stream never changes across a preemption. Before the slot is
+        released its pages are registered in the prefix trie under the
+        full prompt+generated key sequence: the free list's content
+        retention (and any sharers' refcounts) keeps them resident until
+        re-admission revives them or pool pressure evicts/spills them, so
+        resuming usually costs one COW recompute, not a full prefill."""
+        req = self.requests[req_id]
+        slot = req.slot
+        assert self.paged, "preemption needs the paged cache"
+        assert slot is not None and slot not in self.prefilling, (
+            "only active decode slots can be preempted"
+        )
+        if self.prefix_cache:
+            covered = int(self.lengths[slot])
+            gen = req.generated[: covered - self._total_len(req)]
+            self._register_prefix(
+                self._key_tokens(req) + self._gen_keys(req, gen),
+                self.slot_pages[slot],
+            )
+        req.resume = list(req.generated[:-1])
+        req.key_cache.pop("admit_keys", None)
+        # aging restarts from the preemption: a victim that kept its
+        # credit would immediately outrank (and bypass back past) the
+        # very request that preempted it
+        req.arrival_step = self.steps
+        self._release_slot(slot)
+        req.slot = None
+        self.queue.append(req)
+        self.stats["preemptions"] += 1
+        return req
+
+    def _preempt_pass(self) -> None:
+        """After the admission scan: if the best waiting request outranks
+        (by *base* priority — aging never preempts, see the scheduler
+        docstring) the weakest active decode slot by ``preempt_margin``,
+        preempt that slot; the freed lane and pages admit the candidate
+        on the next step's scan. One victim per step — pressure relief is
+        gradual, not a stampede."""
+        if self.sched.cfg.preempt_margin is None or not self.queue:
+            return
+        cand = min(self.queue,
+                   key=lambda r: (-r.priority, r.arrival_step, r.req_id))
+        active = [
+            self.requests[r] for i, r in enumerate(self.slot_req)
+            if r is not None and i not in self.prefilling
+            and not self.slot_hold[i]
+        ]
+        victim = self.sched.pick_victim(cand, active)
+        if victim is not None:
+            self.preempt(victim.req_id)
 
     def _try_admit_paged(self, slot: int, req: Request, *,
                          require_shared: bool = False) -> bool:
@@ -620,10 +878,16 @@ class ServeEngine:
         attempt that then fails are re-lent (or, failing that, evicted),
         so no cached page is silently lost.
         """
-        tlen = self._total_len(req)
+        # a preempted request re-prefills its committed tokens after the
+        # prompt, so its admission length includes the resume suffix; the
+        # page reservation is unchanged (prompt + max_new covers resume +
+        # the remaining new tokens exactly)
+        tlen = self._total_len(req) + len(req.resume)
         P = self.page_size
-        need = pages_needed(min(tlen + req.max_new_tokens, self.max_seq), P)
-        key_tokens = self._key_tokens(req)
+        need = pages_needed(
+            min(self._total_len(req) + req.max_new_tokens, self.max_seq), P
+        )
+        key_tokens = self._admit_keys(req)
         cross_keys = self._cross_keys(req) if self.cross else []
         n_cp = len(cross_keys) // P
         payloads: dict[int, bytes] = {}  # stub id -> recalled page bytes
@@ -872,16 +1136,32 @@ class ServeEngine:
                 self.cross_table[slot, :] = 0
                 self.cross_len[slot] = 0
             self.slot_hold[slot] = 0
+            self.prefilling.pop(slot, None)
             self._admit_ready = True      # freed capacity: rescan the queue
 
     def _finish_admit(self, slot: int, req: Request, first: int,
                       length: int) -> None:
-        req.generated.append(first)
+        # a request with committed tokens is resuming from a preemption:
+        # positions [0, length) re-prefilled the prompt + all committed
+        # tokens but the last, and greedy decode is deterministic, so the
+        # recomputed argmax re-derives that last committed token — verify
+        # it (a mismatch would mean the cache was rebuilt wrong), never
+        # re-emit it
+        resumed = bool(req.generated)
+        if resumed:
+            committed = req.generated[len(req.resume)]
+            if first != committed:
+                self.stats["resume_mismatches"] += 1
+            first = committed
+            req.resume = []
+            req.key_cache.pop("admit_keys", None)
+        else:
+            req.generated.append(first)
         req.slot = slot
         self.slot_req[slot] = req.req_id
         self.lengths[slot] = length
         self.last_token[slot] = first
-        if req.eos_id is not None and first == req.eos_id:
+        if not resumed and req.eos_id is not None and first == req.eos_id:
             req.done = True
             req.slot = None
             self._release_slot(slot)
@@ -916,13 +1196,21 @@ class ServeEngine:
         at most ``max_pages`` offset variants (warmable, like the dense
         engine's buckets); the whole-prompt COW recompute reuses the
         already-compiled ``decode_paged`` instead of adding a
-        per-prompt-length prefill variant."""
-        plen = len(req.prompt)
+        per-prompt-length prefill variant.
+
+        Under a continuous-batching scheduler this method only *begins*
+        the prefill: pages and the slot are bound, a ``_PrefillTask`` is
+        queued, and ``step()`` pumps the chunks across iterations under
+        the token budget (the synchronous mode drains the task inline).
+        A preempted request's ``resume`` tokens prefill here exactly like
+        prompt tokens — they extend ``ptoks`` past the prompt."""
+        ptoks = req.prompt + req.resume
+        plen = len(ptoks)
         mm = self._mm_len(req)
         tlen = mm + plen
         assert plen >= 1 and tlen < self.max_seq, (plen, tlen)
         if key_tokens is None:
-            key_tokens = self._key_tokens(req)
+            key_tokens = self._admit_keys(req)
         P = self.page_size
         full = matched // P
         cow = bool(matched % P)
@@ -937,8 +1225,11 @@ class ServeEngine:
             self.stats["cow_copies"] += 1
         chain = shared[:full] + private
         self.slot_pages[slot] = chain
+        # the page-table row stays on the scratch page until the last
+        # chunk lands (see _PrefillTask); chunks write through a private
+        # row, and the COW whole-prompt path installs the row right below
+        # because it finishes within this call
         self.page_table[slot, :] = 0
-        self.page_table[slot, : len(chain)] = chain
         if self.cross:
             # install the encoder-output region before any decoder compute
             # (chunk prefill and the COW recompute both read it)
@@ -957,15 +1248,33 @@ class ServeEngine:
                 self.stats["cross_regions_computed"] += 1
                 if self.prefix_share:
                     self.prefix_index.insert(cross_keys, cross_chain)
+        # bind the slot for the whole (possibly multi-step) prefill:
+        # cancel/preempt/force-map consumers see the request as admitted
+        self.slot_req[slot] = req.req_id
+        req.slot = slot
+        self.stats["prefill_tokens"] += tlen - matched
+        self.stats["prefill_tokens_shared"] += matched
+        if matched:
+            self.stats["prefix_hits"] += 1
+            self.stats["prefix_hit_tokens"] += matched
+        self.stats["peak_pages"] = max(self.stats["peak_pages"],
+                                       self.pool.outstanding)
+        if self.prefix_cache and not self.prefix_share:
+            # bookkeeping-only trie (recurrent state): phantom ids carry
+            # no page content, so they register at begin — sharing
+            # families must wait for the content (_finish_prefill)
+            self._register_prefix(key_tokens, chain)
         if cow:
-            # whole-prompt hit: only token tlen-1 needs recomputing. One
-            # synthetic decode_paged step writes its K/V into the COW'd
-            # private page and returns the last-position logits. Other
+            # whole-prompt hit: only token tlen-1 needs recomputing, so
+            # the prefill finishes within this call. Install the row now;
+            # one synthetic decode_paged step writes the final token's K/V
+            # into the COW'd private page and returns its logits. Other
             # lanes re-write the K/V the next real step writes anyway
             # (same token, same position — idempotent), and their logits
             # are discarded; inactive lanes scatter into the scratch page.
+            self.page_table[slot, : len(chain)] = chain
             toks = self.last_token.copy()
-            toks[slot] = req.prompt[-1]
+            toks[slot] = ptoks[-1]
             pos = self.lengths.copy()
             pos[slot] = tlen - 1
             batch = {
@@ -979,51 +1288,97 @@ class ServeEngine:
             logits, self.cache = self._decode_paged(self.params, self.cache,
                                                     batch)
             first = int(np.asarray(jnp.argmax(logits[slot])))
-        else:
-            table_row = jnp.asarray(self.page_table[slot])
-            C = self.prefill_chunk
-            embeds = (
-                np.asarray(req.extra["embeds"]).reshape(mm, -1) if mm
-                else None
-            )
-            logits = None
-            for off in range(matched, tlen, C):
-                n = min(C, tlen - off)
-                si = min(max(mm - off, 0), n)  # image rows in this chunk
-                toks = np.zeros((1, C), np.int32)
-                if si < n:
-                    toks[0, si:n] = req.prompt[off + si - mm: off + n - mm]
-                batch = {
-                    "tokens": jnp.asarray(toks),
-                    "valid": jnp.asarray(n, jnp.int32),
-                    "slot": jnp.asarray(slot, jnp.int32),
-                    "page_table": table_row,
-                }
-                kw: dict[str, int] = {"offset": off}
-                if self._mm:
-                    emb = np.zeros((1, C, embeds.shape[1]), embeds.dtype)
-                    if si:
-                        emb[0, :si] = embeds[off:off + si]
-                    batch["embeds"] = jnp.asarray(emb)
-                    kw["mm_len"] = mm
-                if self.cross:
-                    batch["cross_page_table"] = jnp.asarray(
-                        self.cross_table[slot]
-                    )
-                    batch["cross_len"] = jnp.asarray(self.cross_len[slot],
-                                                     jnp.int32)
-                logits, self.cache = self._prefill_chunk(
-                    self.params, self.cache, batch, **kw
+            self._finish_prefill(slot, req, key_tokens, chain, first, tlen)
+            return
+        embeds = (
+            np.asarray(req.extra["embeds"]).reshape(mm, -1) if mm else None
+        )
+        self.prefilling[slot] = _PrefillTask(
+            req=req, tlen=tlen, mm=mm, ptoks=ptoks, offset=matched,
+            key_tokens=key_tokens, embeds=embeds,
+        )
+        if self.sched.cfg.synchronous:
+            self._advance_prefill(slot, None)
+
+    def _advance_prefill(self, slot: int, budget: int | None,
+                         force: bool = False) -> int:
+        """Run prefill chunks for one in-flight task. ``budget`` bounds
+        the tokens computed (None = drain to completion); ``force``
+        grants the first chunk even over budget so a saturated step still
+        makes progress (no prefill livelock when decode lanes consume the
+        whole token budget). Returns the prefill tokens computed."""
+        task = self.prefilling[slot]
+        C = self.prefill_chunk
+        mm = task.mm
+        chain = self.slot_pages[slot]
+        row = np.zeros((self.max_pages,), np.int32)
+        row[: len(chain)] = chain
+        table_row = jnp.asarray(row)
+        used = 0
+        while task.offset < task.tlen:
+            n = min(C, task.tlen - task.offset)
+            if (budget is not None and n > budget - used
+                    and not (force and used == 0)):
+                break
+            off = task.offset
+            si = min(max(mm - off, 0), n)  # image rows in this chunk
+            toks = np.zeros((1, C), np.int32)
+            if si < n:
+                toks[0, si:n] = task.ptoks[off + si - mm: off + n - mm]
+            batch = {
+                "tokens": jnp.asarray(toks),
+                "valid": jnp.asarray(n, jnp.int32),
+                "slot": jnp.asarray(slot, jnp.int32),
+                "page_table": table_row,
+            }
+            kw: dict[str, int] = {"offset": off}
+            if self._mm:
+                emb = np.zeros((1, C, task.embeds.shape[1]),
+                               task.embeds.dtype)
+                if si:
+                    emb[0, :si] = task.embeds[off:off + si]
+                batch["embeds"] = jnp.asarray(emb)
+                kw["mm_len"] = mm
+            if self.cross:
+                batch["cross_page_table"] = jnp.asarray(
+                    self.cross_table[slot]
                 )
-            first = int(np.asarray(jnp.argmax(logits, axis=-1))[0])
-        self.stats["prefill_tokens"] += tlen - matched
-        self.stats["prefill_tokens_shared"] += matched
-        if matched:
-            self.stats["prefix_hits"] += 1
-            self.stats["prefix_hit_tokens"] += matched
-        self.stats["peak_pages"] = max(self.stats["peak_pages"],
-                                       self.pool.outstanding)
-        if self.prefix_cache:
+                batch["cross_len"] = jnp.asarray(self.cross_len[slot],
+                                                 jnp.int32)
+            task.logits, self.cache = self._prefill_chunk(
+                self.params, self.cache, batch, **kw
+            )
+            task.offset += n
+            used += n
+        if task.offset >= task.tlen:
+            first = int(np.asarray(jnp.argmax(task.logits, axis=-1))[0])
+            del self.prefilling[slot]
+            self._finish_prefill(slot, task.req, task.key_tokens,
+                                 chain, first, task.tlen)
+        self._step_prefill_tokens += used
+        return used
+
+    def _pump_prefill(self, budget: int | None) -> int:
+        """Advance every in-flight prefill under the step's remaining
+        token budget (slot order; only the first slot may overshoot by
+        one chunk — the progress guarantee). Returns tokens computed."""
+        used = 0
+        for slot in sorted(self.prefilling):
+            rem = None if budget is None else budget - used
+            if rem is not None and rem <= 0 and used > 0:
+                break
+            used += self._advance_prefill(slot, rem, force=(used == 0))
+        return used
+
+    def _finish_prefill(self, slot: int, req: Request, key_tokens: list[int],
+                        chain: list[int], first: int, tlen: int) -> None:
+        """The last chunk landed: install the real page-table row,
+        register the prompt pages in the trie (only now — their content
+        exists, so a concurrent admission can never share half-written
+        pages), and commit the first token."""
+        self.page_table[slot, :] = 0
+        self.page_table[slot, : len(chain)] = chain
+        if self.prefix_share:
             self._register_prefix(key_tokens, chain)
         # locally resident content = live pages + free-but-cached prefix
         # pages (what the spill tier moves to neighbor hosts)
@@ -1089,6 +1444,11 @@ class ServeEngine:
 
     # -------------------------------------------------------------- snapshot
     def snapshot(self) -> bytes:
+        if self.paged and self.prefilling:
+            # in-flight chunked prefills hold device-side logits that the
+            # blob cannot carry; drain them so the snapshot captures a
+            # clean admission boundary (tokens are unaffected)
+            self._pump_prefill(None)
         state = {
             "cache": self.cache,
             "lengths": self.lengths,
@@ -1114,6 +1474,10 @@ class ServeEngine:
                     "slot": r.slot,
                     "done": r.done,
                     "extra": _encode_extra(r.extra),
+                    "priority": r.priority,
+                    "deadline_ms": r.deadline_ms,
+                    "arrival_step": r.arrival_step,
+                    "resume": r.resume,
                 }
                 for r in self.requests.values()
             },
@@ -1238,6 +1602,7 @@ class ServeEngine:
                         if self.remote_pool is not None:
                             self.remote_pool.release(sp.lease_id)
                         self._evict_node(sid)
+            self.prefilling = {}      # snapshots drain in-flight prefills
             self._admit_ready = True  # restored queue must be rescanned
         self.stats = {**self.stats,
                       **{k: int(v) for k, v in meta.get("stats", {}).items()}}
@@ -1250,6 +1615,12 @@ class ServeEngine:
             req.generated = kv["generated"]
             req.slot = kv["slot"]
             req.done = kv["done"]
+            req.priority = int(kv.get("priority", 0))
+            req.deadline_ms = kv.get("deadline_ms")
+            req.arrival_step = int(kv.get("arrival_step", 0))
+            req.resume = list(kv.get("resume", []))
+            if req.deadline_ms is not None:
+                self._has_deadlines = True
             self.requests[req.req_id] = req
         self.slot_req = meta["slot_req"]
         self.queue = [self.requests[rid] for rid in meta["queue"]]

@@ -1,0 +1,186 @@
+"""SLO-aware scheduling policy for iteration-level continuous batching.
+
+The :class:`~repro.serving.engine.ServeEngine` owns the *mechanics* of
+serving (pages, prefill chunks, the batched decode kernel); this module
+owns the *policy*: which waiting request is admitted next, whether a
+prefill chunk may run this step, when an active slot is preempted back
+to the queue, and when load is shed instead of queued unboundedly.
+
+It is the scheduling analogue of BOINC's deadline-driven work dispatch
+(Anderson, *BOINC: A Platform for Volunteer Computing*) applied at
+**token granularity** rather than workunit granularity: on an ad hoc
+cloud the hosts behind a serving cell come and go (Kirby et al.), so the
+batch composition must be re-decided every iteration, not every request.
+
+Policy summary
+--------------
+
+**Effective priority with aging.** Every request carries a base
+``priority`` (higher = more important). While it waits, its *effective*
+priority rises by one per ``aging_steps`` engine steps, so a starved
+request eventually outranks fresher work of nominally higher priority.
+Admission considers waiting requests in effective-priority order
+(deadline-urgent first within a tier).
+
+**Deadline-ordered admission.** ``deadline_ms`` is a TTFT budget in
+simulated milliseconds from submission. Among requests of equal
+effective priority the earliest absolute deadline is admitted first; a
+request whose deadline expires before it ever reaches a slot is **shed**
+(dropped with its ``shed`` flag set) rather than left to rot in the
+queue.
+
+**Bounded head bypass.** Under page pressure a later request whose
+cached prefix shrinks its private-page need may be admitted past a
+blocked higher-ranked request — but only while the blocked request's
+effective-priority lead is strictly below ``bypass_margin``. Because the
+blocked head *ages* while bypass candidates arrive fresh, its lead grows
+past the margin after at most ``~bypass_margin * aging_steps`` steps, at
+which point bypass shuts off and freed pages accumulate for the head:
+the old queue-scan rule could starve an oversized head indefinitely
+under a steady stream of prefix hits, the aged rule cannot.
+
+**Priority preemption.** When a waiting request's *base* priority
+exceeds an active slot's base priority by ``preempt_margin`` and no free
+slot (or page headroom) can take it, the lowest-priority active decode
+slot is preempted back to the waiting queue. Preemption is deliberately
+keyed on base priorities, not aged ones: aging exists to order peers
+fairly, and letting it trigger preemption would make any uniform
+backlog thrash. A preempted slot's pages are registered in the prefix
+trie before release, so they stay resident (refcounted or free-but-
+cached) until re-admission revives them or pool pressure evicts them.
+
+**Queue bounds.** With ``max_queue`` set, admission sheds the
+lowest-ranked waiting requests once the queue exceeds the bound —
+degrade, don't queue unboundedly.
+
+**Token budget.** ``token_budget`` caps the tokens processed per engine
+step: each active decode lane reserves one, and only the remainder may
+be spent on prefill chunks. Long prompts therefore prefill across
+several steps while decode lanes keep emitting every step — inter-token
+latency stays flat through prompt bursts. ``token_budget=None`` selects
+the legacy synchronous mode (whole prompt prefilled at admission), kept
+as the non-continuous reference for parity benchmarks.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import TYPE_CHECKING, Iterable
+
+if TYPE_CHECKING:  # pragma: no cover - import cycle guard, typing only
+    from repro.serving.engine import Request
+
+
+@dataclass
+class SchedulerConfig:
+    """Knobs for the serving scheduler (see module docstring)."""
+
+    # tokens (decode lanes + prefill chunk tokens) per engine step;
+    # None = legacy synchronous admission (the non-continuous reference)
+    token_budget: int | None = 256
+    # waiting steps per +1 effective priority (0 disables aging)
+    aging_steps: int = 32
+    # max effective-priority lead a blocked request may have before
+    # cached-prefix bypass past it shuts off
+    bypass_margin: int = 2
+    # base-priority gap required to preempt an active slot; None disables
+    preempt_margin: int | None = 2
+    # failed-candidate trie lookups per admission scan (bypass window)
+    scan_limit: int = 16
+    # waiting-queue bound; lowest-ranked requests beyond it are shed
+    max_queue: int | None = None
+
+    @property
+    def synchronous(self) -> bool:
+        return self.token_budget is None
+
+
+class Scheduler:
+    """Pure policy over the engine's waiting queue and active slots.
+
+    Holds no request state of its own — requests carry their
+    ``priority`` / ``deadline_ms`` / ``arrival_step``, so engine
+    snapshot/restore round-trips the whole scheduling picture for free.
+    """
+
+    def __init__(self, cfg: SchedulerConfig | None = None,
+                 *, decode_step_s: float = 5e-3):
+        self.cfg = cfg or SchedulerConfig()
+        self.decode_step_s = decode_step_s
+
+    # ------------------------------------------------------------ priorities
+    def effective_priority(self, req: "Request", step: int) -> int:
+        """Base priority plus the aging credit earned while waiting."""
+        if self.cfg.aging_steps <= 0:
+            return req.priority
+        waited = max(0, step - req.arrival_step)
+        return req.priority + waited // self.cfg.aging_steps
+
+    def deadline_step(self, req: "Request") -> float:
+        """Absolute engine step by which the request must have started."""
+        if req.deadline_ms is None:
+            return float("inf")
+        return req.arrival_step + req.deadline_ms / (self.decode_step_s * 1e3)
+
+    def expired(self, req: "Request", step: int) -> bool:
+        """A still-waiting request whose TTFT deadline already passed."""
+        return step > self.deadline_step(req)
+
+    # ------------------------------------------------------------- admission
+    def order(self, queue: Iterable["Request"], step: int,
+              ) -> list["Request"]:
+        """Admission order: effective priority desc, then earliest
+        deadline, then arrival (FIFO among true peers)."""
+        return sorted(
+            queue,
+            key=lambda r: (-self.effective_priority(r, step),
+                           self.deadline_step(r), r.arrival_step, r.req_id),
+        )
+
+    def may_bypass(self, blocked: "Request", candidate: "Request",
+                   step: int) -> bool:
+        """May ``candidate`` be admitted past page-blocked ``blocked``?
+        Only while the blocked request's aged lead is strictly below the
+        margin — the engine additionally requires the candidate to hold a
+        resident cached prefix (it must *shrink* the page need, not just
+        fit). Strict: a preemption victim re-queued ``preempt_margin``
+        priorities under its preemptor must not bypass straight back past
+        it, so ``bypass_margin`` defaults to ``preempt_margin`` and the
+        boundary case blocks."""
+        lead = (self.effective_priority(blocked, step)
+                - self.effective_priority(candidate, step))
+        return lead < self.cfg.bypass_margin
+
+    # ------------------------------------------------------------ preemption
+    def pick_victim(self, candidate: "Request",
+                    active: Iterable["Request"]) -> "Request | None":
+        """Lowest-base-priority active request the candidate may preempt,
+        or None. Base priorities only — see the module docstring."""
+        if self.cfg.preempt_margin is None:
+            return None
+        victims = sorted(active, key=lambda r: (r.priority, -r.req_id))
+        if not victims:
+            return None
+        v = victims[0]
+        if candidate.priority >= v.priority + self.cfg.preempt_margin:
+            return v
+        return None
+
+    # -------------------------------------------------------------- shedding
+    def overflow(self, queue: list["Request"], step: int) -> list["Request"]:
+        """Waiting requests to shed because the queue exceeds its bound:
+        the lowest-ranked tail, never the head."""
+        if self.cfg.max_queue is None or len(queue) <= self.cfg.max_queue:
+            return []
+        ranked = self.order(queue, step)
+        return ranked[self.cfg.max_queue:]
+
+    # ---------------------------------------------------------------- budget
+    def prefill_budget(self, n_decode_lanes: int, prefilling: bool) -> int:
+        """Prefill tokens allowed this step after decode lanes reserve
+        theirs. Guarantees minimal progress (one chunk's worth is granted
+        by the engine when a prefill is mid-flight and the budget is
+        exhausted) via the ``prefilling`` flag at the call site."""
+        assert self.cfg.token_budget is not None
+        del prefilling
+        return max(0, self.cfg.token_budget - n_decode_lanes)

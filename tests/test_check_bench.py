@@ -1,0 +1,123 @@
+"""The CI smoke assertions (benchmarks.check_bench) are themselves
+tested: each scenario accepts its known-good row shape, rejects every
+weakened counter it exists to catch, and the CLI exits non-zero on a
+violation — so the workflow's gate cannot silently rot."""
+
+import json
+
+import pytest
+
+from benchmarks import check_bench as cb
+
+
+def _serving_rows():
+    return [
+        {"bench": "serving", "engine": "dense", "match": ""},
+        {"bench": "serving", "engine": "paged", "match": True},
+        {"bench": "serving-prefix", "engine": "paged+share", "match": True},
+        {"bench": "serving-spill", "engine": "paged+spill", "match": True},
+        {"bench": "serving-vlm", "engine": "paged", "match": True},
+    ]
+
+
+def _batch_row():
+    return {"bench": "batch-churn", "parity": True, "reissued": 3,
+            "quorum_failures": 1, "reissued_timeout": 2,
+            "hosts_killed": 2, "hosts": 6}
+
+
+def _cell_row():
+    return {"bench": "cell-churn", "parity": True, "hosts": 4,
+            "hosts_killed": 1, "resharded": 2, "downtime_steps": 3,
+            "tokens_replayed": 11, "forced_mismatches": 0}
+
+
+def _latency_row():
+    return {"bench": "latency", "parity": True, "n_requests": 1000,
+            "ttft_ms_p50": 120.0, "ttft_ms_p99": 800.0,
+            "itl_ms_p50": 2.2, "itl_ms_p99": 5.1,
+            "ref_ttft_ms_p50": 118.0, "ref_ttft_ms_p99": 790.0,
+            "ref_itl_ms_p50": 2.2, "ref_itl_ms_p99": 6.6,
+            "preemptions": 6, "shed_expired": 5, "shed_overflow": 28,
+            "resume_mismatches": 0, "pressure_served": 15}
+
+
+def test_good_rows_pass():
+    assert cb.check_serving(_serving_rows()).startswith("OK")
+    assert cb.check_batch_churn([_batch_row()]).startswith("OK")
+    assert cb.check_cell_churn([_cell_row()]).startswith("OK")
+    assert cb.check_latency([_latency_row()]).startswith("OK")
+
+
+def test_serving_rejects_parity_failure_and_missing_scenarios():
+    rows = _serving_rows()
+    rows[1]["match"] = False
+    with pytest.raises(AssertionError, match="parity"):
+        cb.check_serving(rows)
+    with pytest.raises(AssertionError, match="missing"):
+        cb.check_serving(_serving_rows()[:2])
+    with pytest.raises(AssertionError, match="no rows|parity rows"):
+        cb.check_serving([{"bench": "serving", "match": ""}])
+
+
+@pytest.mark.parametrize("field,value,msg", [
+    ("parity", False, "diverged"),
+    ("reissued", 0, "no re-issues"),
+    ("quorum_failures", 0, "quorum"),
+    ("reissued_timeout", 0, "timeout"),
+])
+def test_batch_churn_rejects_weakened_counters(field, value, msg):
+    row = _batch_row()
+    row[field] = value
+    with pytest.raises(AssertionError, match=msg):
+        cb.check_batch_churn([row])
+
+
+@pytest.mark.parametrize("field,value,msg", [
+    ("parity", False, "diverged"),
+    ("hosts_killed", 0, "25%"),
+    ("resharded", 0, "re-shard"),
+    ("downtime_steps", 0, "downtime"),
+    ("tokens_replayed", 0, "replay"),
+    ("forced_mismatches", 1, "replay diverged"),
+])
+def test_cell_churn_rejects_weakened_counters(field, value, msg):
+    row = _cell_row()
+    row[field] = value
+    with pytest.raises(AssertionError, match=msg):
+        cb.check_cell_churn([row])
+
+
+@pytest.mark.parametrize("field,value,msg", [
+    ("parity", False, "changed tokens"),
+    ("ttft_ms_p99", 1.0, "percentiles"),      # p50 > p99
+    ("itl_ms_p50", 0.0, "percentiles"),
+    ("preemptions", 0, "preemption"),
+    ("shed_expired", 0, "deadline shed"),
+    ("shed_overflow", 0, "overflow shed"),
+    ("resume_mismatches", 1, "off-token"),
+    ("pressure_served", 0, "served nobody"),
+])
+def test_latency_rejects_weakened_counters(field, value, msg):
+    row = _latency_row()
+    row[field] = value
+    with pytest.raises(AssertionError, match=msg):
+        cb.check_latency([row])
+
+
+def test_missing_scenario_row_is_an_error():
+    with pytest.raises(AssertionError, match="no 'latency' row"):
+        cb.check_latency(_serving_rows())
+
+
+def test_cli_round_trip(tmp_path, capsys):
+    path = tmp_path / "BENCH_SERVING.json"
+    path.write_text(json.dumps({"rows": [_latency_row(), _batch_row()]}))
+    cb.main(["latency", "--json", str(path)])
+    assert capsys.readouterr().out.startswith("OK")
+    cb.main(["batch-churn", "--json", str(path)])
+    with pytest.raises(AssertionError):
+        cb.main(["cell-churn", "--json", str(path)])
+    path.write_text(json.dumps({"rows": []}))
+    with pytest.raises(AssertionError, match="no rows"):
+        cb.main(["latency", "--json", str(path)])
