@@ -11,9 +11,11 @@ by ``tests/test_check_bench.py``.
     PYTHONPATH=src python -m benchmarks.check_bench SCENARIO [--json PATH]
 
 Scenarios: ``serving`` (token parity across every paged/prefix/spill/vlm
-row), ``batch-churn`` (quorum + timeout re-issue counters), ``cell-churn``
-(re-shard + mid-stream replay counters), ``latency`` (continuous-batching
-parity, sane TTFT/ITL percentiles, live preemption + shed counters).
+row), ``spec-decode`` (speculative-decoding parity at both acceptance
+extremes, tokens/step payoff, fork fan-out page sharing), ``batch-churn``
+(quorum + timeout re-issue counters), ``cell-churn`` (re-shard +
+mid-stream replay counters), ``latency`` (continuous-batching parity,
+sane TTFT/ITL percentiles, live preemption + shed counters).
 Exit status is non-zero on any violated invariant.
 """
 
@@ -96,8 +98,54 @@ def check_latency(rows: list[dict]) -> str:
             f"{row['shed_expired'] + row['shed_overflow']} shed")
 
 
+def check_spec_decode(rows: list[dict]) -> str:
+    found = [r for r in rows if r.get("bench") == "spec-decode"]
+    assert found, "no 'spec-decode' rows in the JSON"
+    by_engine = {}
+    for r in found:
+        by_engine.setdefault(r["engine"], []).append(r)
+    for eng in ("plain", "spec-self", "spec-pair", "fork"):
+        assert eng in by_engine, f"no '{eng}' spec-decode row"
+
+    # greedy speculative decode must be token-identical to plain decode,
+    # for the self-draft (acceptance ceiling) AND the real pairing
+    # (acceptance floor: near-zero agreement still rolls back exactly)
+    for eng in ("spec-self", "spec-pair"):
+        row = by_engine[eng][0]
+        assert row["parity"] is True, f"spec decode changed tokens: {row}"
+    self_row = by_engine["spec-self"][0]
+    acc = self_row["acceptance_rate"]
+    assert 0 < acc <= 1, f"degenerate acceptance rate: {self_row}"
+    assert acc == 1.0, f"self-draft must accept everything: {self_row}"
+    assert self_row["spec_rounds"] >= 1, f"no spec round ran: {self_row}"
+    # the payoff: with acceptance pinned at 1, speculation must commit
+    # strictly more tokens per engine step than plain decode
+    plain = by_engine["plain"][0]
+    assert self_row["tokens_per_step"] > plain["tokens_per_step"], (
+        f"speculation committed no extra tokens/step: "
+        f"{self_row} vs {plain}")
+    pair = by_engine["spec-pair"][0]
+    assert 0 <= pair["acceptance_rate"] < 1, \
+        f"paired acceptance out of range: {pair}"
+
+    forks = by_engine["fork"]
+    shared = [r for r in forks if r["fanout"] > 1]
+    assert shared, "no fan-out > 1 fork row"
+    for row in forks:
+        assert row["latency_ms_per_req"] > 0, f"degenerate latency: {row}"
+        if row["fanout"] > 1:
+            assert row["page_sharing_ratio"] > 1, \
+                f"fan-out did not share pages: {row}"
+    gain = (self_row["tokens_per_step"] / plain["tokens_per_step"])
+    return (f"OK: spec parity at acceptance {acc:.2f} "
+            f"({gain:.2f}x tokens/step), pair parity at "
+            f"{pair['acceptance_rate']:.2f}, "
+            f"{len(shared)} fan-outs sharing pages")
+
+
 CHECKS = {
     "serving": check_serving,
+    "spec-decode": check_spec_decode,
     "batch-churn": check_batch_churn,
     "cell-churn": check_cell_churn,
     "latency": check_latency,

@@ -1,0 +1,217 @@
+"""Speculative-decoding benchmark (``spec-decode`` rows in BENCH_SERVING).
+
+**spec-decode** — three engines over one greedy workload on the paged
+serving path:
+
+- ``plain``      — the non-speculative reference (the parity oracle),
+- ``spec-self``  — the target drafting for itself: every proposal is the
+  target's own argmax, so acceptance is exactly 1.0 and each round
+  commits a full ``k+1`` window. This isolates the *mechanics* — paged
+  draft+verify, rollback bookkeeping, budget accounting — with the
+  acceptance ceiling pinned,
+- ``spec-pair``  — the real draft pairing from ``DRAFT_PAIRS``
+  (smollm-360m drafting for qwen3-8b). Reduced configs are randomly
+  initialized, so the two models rarely agree and acceptance sits near
+  zero; the row is here for the *contract*, not the speedup: parity must
+  hold at any acceptance rate, because rejected windows roll back to
+  exactly the plain-decode token.
+
+Reported per engine: tokens/wall-second, committed tokens per engine
+step (the speculation payoff: ``spec-self`` must beat ``plain``),
+acceptance rate, spec rounds, and token-for-token parity vs ``plain``.
+
+**fork fan-out** — one parent decodes a few tokens, then ``fork``\\ s into
+an n-way sampled ensemble (n = 1/4/8). Every fully committed page is
+shared copy-on-write at fork time, so the table reports the logical /
+physical page ratio across the fan-out plus wall latency per completed
+request — the cost of n sampled continuations when n-1 of them start
+from shared pages instead of a re-prefill.
+
+Rows land in ``BENCH_SERVING.json`` (merged by scenario, see
+``serving_bench.write_json``); ``REPRO_BENCH_TINY=1`` shrinks the
+workload for the CI smoke job, which re-asserts the parity/acceptance/
+sharing invariants via ``benchmarks.check_bench spec-decode``.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.serving_bench import write_json
+from repro.serving.scheduler import SchedulerConfig
+
+TINY = bool(os.environ.get("REPRO_BENCH_TINY"))
+
+ARCH = "qwen3-8b"
+MAX_SEQ = 256
+PAGE_SIZE = 16
+PREFILL_CHUNK = 64
+SPEC_K = 4
+MAX_NEW = 8 if TINY else 16
+PROMPT_LENS = [32, 17, 40, 5] if TINY else [32, 17, 40, 5, 64, 96, 23, 48]
+N_SLOTS = 2 if TINY else 4
+FANOUTS = (1, 4) if TINY else (1, 4, 8)
+FAN_PROMPT = 32
+FAN_WARM_STEPS = 4          # parent decode steps before the fork
+
+
+def _sync_sched():
+    # synchronous reference scheduler: admission is whole-prompt, so the
+    # timed pass measures decode mechanics, not budget interleaving (the
+    # continuous-mode interplay is covered by tests/test_spec_decode.py)
+    return SchedulerConfig(token_budget=None)
+
+
+def _workload(cfg, seed):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(1, cfg.vocab_size, n).tolist() for n in PROMPT_LENS]
+
+
+def _drain(engine, prompts):
+    reqs = [engine.submit(p, max_new_tokens=MAX_NEW) for p in prompts]
+    t0 = time.perf_counter()
+    engine.run(5000)
+    wall = time.perf_counter() - t0
+    assert all(r.done for r in reqs)
+    return sorted(reqs, key=lambda r: r.req_id), wall
+
+
+def _spec_scenario(rows, cfg, model, params, draft, dparams) -> None:
+    from repro.serving.engine import ServeEngine
+
+    engines = {
+        "plain": {},
+        "spec-self": dict(draft=model, draft_params=params, spec_k=SPEC_K),
+        "spec-pair": dict(draft=draft, draft_params=dparams, spec_k=SPEC_K),
+    }
+
+    print(f"spec-decode bench: {ARCH} (reduced), draft "
+          f"{draft.cfg.arch_id}, k={SPEC_K}, {len(PROMPT_LENS)} prompts, "
+          f"{N_SLOTS} slots, max_new {MAX_NEW}")
+    print(f"{'engine':>10} {'tok/s':>8} {'tok/step':>8} {'accept':>7} "
+          f"{'rounds':>6} {'parity':>6}")
+
+    results = {}
+    for name, extra in engines.items():
+        eng = ServeEngine(model, params, n_slots=N_SLOTS, max_seq=MAX_SEQ,
+                          paged=True, page_size=PAGE_SIZE,
+                          prefill_chunk=PREFILL_CHUNK,
+                          scheduler=_sync_sched(), **extra)
+        _drain(eng, _workload(cfg, seed=1))       # warmup: compile-free pass
+        eng.reset_stats()
+        steps0 = eng.steps
+        reqs, wall = _drain(eng, _workload(cfg, seed=2))
+        n_tok = sum(len(r.generated) for r in reqs)
+        proposed = eng.stats["spec_proposed"]
+        results[name] = {
+            "outs": [r.generated for r in reqs],
+            "tok_s": n_tok / wall,
+            "tok_step": n_tok / (eng.steps - steps0),
+            "accept": eng.stats["spec_accepted"] / proposed if proposed
+            else "",
+            "rounds": eng.stats["spec_rounds"],
+        }
+
+    for name, r in results.items():
+        parity = r["outs"] == results["plain"]["outs"]
+        acc = f"{r['accept']:.3f}" if r["accept"] != "" else ""
+        print(f"{name:>10} {r['tok_s']:>8.1f} {r['tok_step']:>8.2f} "
+              f"{acc:>7} {r['rounds']:>6} "
+              f"{str(parity) if name != 'plain' else '':>6}")
+        rows.append({
+            "bench": "spec-decode", "engine": name, "slots": N_SLOTS,
+            "spec_k": SPEC_K if name != "plain" else "",
+            "draft": ({"spec-self": ARCH, "spec-pair": draft.cfg.arch_id}
+                      .get(name, "")),
+            "tokens_per_s": round(r["tok_s"], 2),
+            "tokens_per_step": round(r["tok_step"], 3),
+            "acceptance_rate": (round(r["accept"], 4)
+                                if r["accept"] != "" else ""),
+            "spec_rounds": r["rounds"],
+            "parity": parity if name != "plain" else "",
+        })
+    gain = (results["spec-self"]["tok_step"]
+            / results["plain"]["tok_step"])
+    print(f"       spec-self commits {gain:.2f}x the tokens per step "
+          f"(acceptance ceiling)")
+
+
+def _fanout_scenario(rows, cfg, model, params) -> None:
+    from repro.serving.engine import ServeEngine
+
+    rng = np.random.default_rng(7)
+    prompt = rng.integers(1, cfg.vocab_size, FAN_PROMPT).tolist()
+
+    print(f"\nfork fan-out bench: {ARCH} (reduced), prompt {FAN_PROMPT}, "
+          f"fork after {FAN_WARM_STEPS} decode steps, max_new {MAX_NEW}")
+    print(f"{'fanout':>6} {'lat ms/req':>10} {'sharing':>8} "
+          f"{'cow':>4} {'pages':>6}")
+
+    for fanout in FANOUTS:
+        def build():
+            return ServeEngine(model, params, n_slots=fanout,
+                               max_seq=MAX_SEQ, paged=True,
+                               page_size=PAGE_SIZE,
+                               prefill_chunk=PREFILL_CHUNK,
+                               scheduler=_sync_sched())
+
+        def fan_out(eng):
+            parent = eng.submit(prompt, max_new_tokens=MAX_NEW)
+            for _ in range(FAN_WARM_STEPS):
+                eng.step()
+            lanes = [parent]
+            if fanout > 1:
+                lanes += eng.fork(parent.req_id, fanout - 1,
+                                  temperature=1.0,
+                                  seeds=list(range(1, fanout)))
+            return lanes
+
+        fan_out(build())                          # warmup (compile)
+        eng = build()
+        t0 = time.perf_counter()
+        lanes = fan_out(eng)
+        logical = sum(len(eng.slot_pages[r.slot]) for r in lanes)
+        physical = len({p for r in lanes for p in eng.slot_pages[r.slot]})
+        eng.run(5000)
+        wall = time.perf_counter() - t0
+        assert all(r.done for r in lanes)
+        assert eng.pool.outstanding == 0, "refcount leak after fan-out"
+        sharing = logical / physical
+        lat = wall / fanout
+        print(f"{fanout:>6} {lat * 1e3:>10.1f} {sharing:>8.2f} "
+              f"{eng.stats['cow_copies']:>4} {physical:>6}")
+        rows.append({
+            "bench": "spec-decode", "engine": "fork", "fanout": fanout,
+            "latency_ms_per_req": round(lat * 1e3, 2),
+            "page_sharing_ratio": round(sharing, 3),
+            "cow_copies": eng.stats["cow_copies"],
+            "physical_pages": physical,
+            "fork_shared_pages": eng.stats["fork_shared_pages"],
+        })
+
+
+def main(rows=None) -> list[dict]:
+    rows = rows if rows is not None else []
+    from repro.configs import REDUCED, draft_for
+    from repro.models import get_model
+
+    cfg = REDUCED[ARCH]
+    model = get_model(cfg)
+    params = model.init(jax.random.key(0))
+    dcfg = draft_for(ARCH, reduced=True)
+    draft = get_model(dcfg)
+    dparams = draft.init(jax.random.key(1))
+
+    mark = len(rows)
+    _spec_scenario(rows, cfg, model, params, draft, dparams)
+    _fanout_scenario(rows, cfg, model, params)
+    write_json(rows[mark:])
+    return rows
+
+
+if __name__ == "__main__":
+    main()

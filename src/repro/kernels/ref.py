@@ -132,6 +132,44 @@ def paged_decode_attention(
 
 
 # ---------------------------------------------------------------------------
+# Paged verify attention (a window of draft tokens vs a paged KV cache)
+# ---------------------------------------------------------------------------
+
+
+def paged_verify_attention(
+    q: jax.Array,           # (B, W, H, D) — W draft/verify positions per seq
+    k_pages: jax.Array,     # (n_pages, P, K, D) — shared page pool
+    v_pages: jax.Array,     # (n_pages, P, K, D)
+    page_table: jax.Array,  # (B, max_pages) int32 — physical page ids
+    positions: jax.Array,   # (B,) int32 — cache position of query 0 per seq
+    *,
+    scale: float | None = None,
+) -> jax.Array:
+    """Multi-query paged decode oracle for speculative verification.
+
+    Query ``j`` of sequence ``b`` sits at cache position ``positions[b] + j``
+    and attends causally over the first ``positions[b] + j + 1`` cache
+    entries (its own K/V included — the engine scatters the window's K/V
+    before attending, exactly like single-token decode)."""
+    b, w, h, d = q.shape
+    n_pages, p, k_heads, _ = k_pages.shape
+    k = _expand_kv(k_pages[page_table].reshape(b, -1, k_heads, d), h)
+    v = _expand_kv(v_pages[page_table].reshape(b, -1, k_heads, d), h)
+    s = k.shape[1]
+    scale = scale if scale is not None else d ** -0.5
+    logits = jnp.einsum(
+        "bqhd,bkhd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale
+    kpos = jnp.arange(s)[None, None, :]                        # (1, 1, S)
+    qend = positions[:, None, None] + jnp.arange(w)[None, :, None] + 1
+    mask = kpos < qend                                         # (B, W, S)
+    logits = jnp.where(mask[:, None], logits, NEG_INF)
+    pr = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", pr, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
 # Paged cross attention (query block vs a paged encoder-output cache)
 # ---------------------------------------------------------------------------
 

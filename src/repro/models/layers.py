@@ -187,6 +187,61 @@ def attn_decode_paged(
     return out, k_pages, v_pages
 
 
+def paged_kv_append_multi(
+    pages: jax.Array,       # (n_pages, P, K, dh) — shared pool
+    new: jax.Array,         # (B, W, K, dh)
+    page_table: jax.Array,  # (B, max_pages) int32
+    positions: jax.Array,   # (B,) — token position of new[:, 0]
+) -> jax.Array:
+    """Scatter a W-token window per sequence into its page-table-mapped
+    pages (the multi-token sibling of :func:`paged_kv_append`, used by
+    speculative verification).
+
+    Window positions past the table's capacity land on the scratch page
+    (id 0) instead of clobbering a clamped-index real page — the engine
+    never commits tokens it has no page for, so scratch collisions across
+    lanes are writes that are never read."""
+    P = pages.shape[1]
+    max_pages = page_table.shape[1]
+    W = new.shape[1]
+    pos = positions[:, None] + jnp.arange(W)[None, :]      # (B, W)
+    logical = pos // P
+    pid = jnp.where(
+        logical < max_pages,
+        jnp.take_along_axis(
+            page_table, jnp.minimum(logical, max_pages - 1), axis=1
+        ),
+        0,
+    )
+    return pages.at[pid, pos % P].set(new.astype(pages.dtype))
+
+
+def attn_verify_paged(
+    p: dict,
+    x: jax.Array,            # (B, W, d) — already normalized verify window
+    cfg: ModelConfig,
+    positions: jax.Array,    # (B,) — cache position of x[:, 0]
+    k_pages: jax.Array,      # (n_pages, P, K, dh)
+    v_pages: jax.Array,
+    page_table: jax.Array,   # (B, max_pages)
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Multi-query attention of a speculative verify window against a paged
+    cache: the window's K/V is scattered in first (exactly like decode),
+    then every query attends causally up to its own position. Stale K/V
+    beyond an eventual rollback point is harmless — it is overwritten by
+    the next window before any length-masked read reaches it. Returns
+    (out, new_k_pages, new_v_pages)."""
+    W = x.shape[1]
+    pos_mat = positions[:, None] + jnp.arange(W)[None, :]  # (B, W)
+    q, k, v = _project_qkv(p, x, cfg, pos_mat)
+    k_pages = paged_kv_append_multi(k_pages, k, page_table, positions)
+    v_pages = paged_kv_append_multi(v_pages, v, page_table, positions)
+    out = ops.paged_verify_attention(q, k_pages, v_pages, page_table,
+                                     positions)
+    out = jnp.einsum("bshk,hkd->bsd", out, cast(p["wo"]))
+    return out, k_pages, v_pages
+
+
 def attn_prefill_chunk(
     p: dict,
     x: jax.Array,            # (1, C, d) — one prompt chunk, already normalized

@@ -129,6 +129,15 @@ class ModelFns:
     ] | None = None
     paged_state: bool = False
 
+    # speculative verification (optional): one causal multi-query pass over
+    # a W-token draft window. batch carries tokens (B, W), positions (B,)
+    # — the cache position of tokens[:, 0] — and page_table (B, max_pages);
+    # returns (logits (B, W, V), cache) with the window's K/V scattered into
+    # the pages exactly as W sequential decode_paged steps would have.
+    verify_paged: Callable[
+        [Pytree, Pytree, dict], tuple[jax.Array, Pytree]
+    ] | None = None
+
     # paged cross-attention region (enc-dec families). The cross K/V —
     # derived once per request from the encoder output — lives in its own
     # refcounted page chain rather than a dense (n_slots, ENC_SEQ) block:
@@ -196,6 +205,15 @@ class ModelFns:
         excluded: for them the engine keeps trie bookkeeping only and
         never skips prefill."""
         return self.supports_paged and not self.paged_state
+
+    @property
+    def supports_spec_decode(self) -> bool:
+        """True when the family can serve as a speculative-decoding target
+        (or draft): it exposes the multi-query ``verify_paged`` pass and
+        its cache rolls back by page offset alone. ``paged_state`` families
+        (SSM/hybrid) are excluded — recurrent state advances with every
+        token and cannot be rewound by resetting a length."""
+        return self.verify_paged is not None and self.supports_prefix_sharing
 
     @property
     def supports_paged_cross(self) -> bool:

@@ -220,6 +220,12 @@ def moe_mlp_forward(p: dict, x: jax.Array, cfg: ModelConfig):
     # sort-based dispatch
     cap = int(math.ceil(T * k * cfg.capacity_factor / E))
     cap = max(8, min(cap, T))  # at least a tile, at most all tokens
+    if S == 1:
+        # decode/verify lanes: a capacity drop would make one lane's output
+        # depend on which other lanes share the step — parity across batch
+        # compositions (continuous batching, the speculative verify fold)
+        # demands none, and decode batches are small enough to afford it
+        cap = max(cap, T)
     e_flat = sel.reshape(-1)                                    # (T*k,)
     order = jnp.argsort(e_flat, stable=True)
     sorted_e = e_flat[order]
@@ -484,6 +490,25 @@ def decode_paged_fn(params, cache, batch, cfg: ModelConfig):
     return logits, {"k_pages": ks, "v_pages": vs}
 
 
+def verify_paged_fn(params, cache, batch, cfg: ModelConfig):
+    """Speculative verification through dense + MoE layers: fold the
+    W-token draft window into the batch dim and run the ordinary
+    ``decode_paged`` path, so every lane's arithmetic is bitwise identical
+    to plain decode (the greedy spec-decode exactness guarantee — see
+    ``transformer.verify_paged_fn``). MoE routing is per-token (top-k over
+    each lane's own hidden state), so folding does not change dispatch."""
+    tokens = batch["tokens"]                              # (B, W)
+    B, W = tokens.shape
+    fold = {
+        "tokens": tokens.reshape(B * W, 1),
+        "positions": (batch["positions"][:, None]
+                      + jnp.arange(W)[None, :]).reshape(-1),
+        "page_table": jnp.repeat(batch["page_table"], W, axis=0),
+    }
+    logits, cache = decode_paged_fn(params, cache, fold, cfg)
+    return logits.reshape(B, W, -1), cache
+
+
 def make_model(cfg: ModelConfig) -> ModelFns:
     return ModelFns(
         cfg=cfg,
@@ -496,6 +521,7 @@ def make_model(cfg: ModelConfig) -> ModelFns:
         paged_cache_specs=functools.partial(paged_cache_specs, cfg),
         prefill_chunk=functools.partial(prefill_chunk_fn, cfg=cfg),
         decode_paged=functools.partial(decode_paged_fn, cfg=cfg),
+        verify_paged=functools.partial(verify_paged_fn, cfg=cfg),
         # pure page-pool cache: eligible for copy-on-write prefix sharing
         paged_state=False,
     )

@@ -246,6 +246,32 @@ def decode_paged_fn(params, cache, batch, cfg: ModelConfig):
     return logits, {"k_pages": ks, "v_pages": vs}
 
 
+def verify_paged_fn(params, cache, batch, cfg: ModelConfig):
+    """Speculative verification: one forward pass over a W-token draft
+    window, returning logits for *every* window position (the engine
+    argmaxes them to find the accepted prefix).
+
+    The window is folded into the batch dim and run through the ordinary
+    ``decode_paged`` path — lane (b, j) decodes token j of sequence b at
+    cache position ``positions[b] + j``. Per-query causality is exact: all
+    folded lanes scatter their K/V per layer before attending, and lane j's
+    length mask stops at its own position. Folding (rather than the fused
+    (B, W) formulation of ``ops.paged_verify_attention``) keeps every
+    lane's arithmetic *bitwise identical* to plain decode, which is what
+    lets greedy spec-decode guarantee token-for-token parity instead of
+    parity-up-to-bf16-rounding."""
+    tokens = batch["tokens"]                              # (B, W)
+    B, W = tokens.shape
+    fold = {
+        "tokens": tokens.reshape(B * W, 1),
+        "positions": (batch["positions"][:, None]
+                      + jnp.arange(W)[None, :]).reshape(-1),
+        "page_table": jnp.repeat(batch["page_table"], W, axis=0),
+    }
+    logits, cache = decode_paged_fn(params, cache, fold, cfg)
+    return logits.reshape(B, W, -1), cache
+
+
 def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
     def extra(cfg, shape):
         if cfg.family != "vlm" or shape.kind == "decode":
@@ -285,5 +311,6 @@ def make_model(cfg: ModelConfig) -> ModelFns:
         paged_cache_specs=functools.partial(paged_cache_specs, cfg),
         prefill_chunk=functools.partial(prefill_chunk_fn, cfg=cfg),
         decode_paged=functools.partial(decode_paged_fn, cfg=cfg),
+        verify_paged=functools.partial(verify_paged_fn, cfg=cfg),
         paged_mm_inline=cfg.family == "vlm",
     )

@@ -47,6 +47,29 @@ fall back gracefully: the trie tracks would-be hits for stats, but
 recurrent state is not page-addressable, so their prefill is never
 skipped.
 
+**Speculative decoding**: construct the engine with a paired ``draft``
+model (a small same-vocab family member, see
+``repro.configs.DRAFT_PAIRS``) and each decode step becomes a
+draft+verify round: the draft proposes ``spec_k`` tokens by sequential
+paged decode, the target verifies the whole window in ONE chunked paged
+forward pass (``verify_paged``, a fold that is bitwise identical to
+sequential decode — the exactness guarantee), and the longest matching
+prefix commits 1..k+1 tokens. Rejection rolls back by page offset:
+lengths stop at the accepted point; stale K/V past them sits beyond
+every length mask and is rewritten before any read. The draft's paged
+cache leaves live inside the engine cache under a ``draft_`` prefix,
+addressed by the *same* page tables and pool pages, so COW, prefix
+sharing, spill and snapshots cover them for free. Greedy spec decode is
+token-for-token identical to non-speculative decode (enforced in
+tier-1 tests); sampled lanes stay reproducible because their Gumbel
+noise is keyed by (seed, position), which the verify window can replay.
+
+**Decode-page sharing / fork**: completed requests register their
+*generated* pages (not just the prompt) in the prefix trie, and
+``fork()`` splits n sampling children off a live slot sharing every
+full committed page copy-on-write — n-way fan-out shares all pages up
+to the divergence point instead of stopping at the prompt boundary.
+
 **Multi-host page spill**: with a
 :class:`~repro.serving.kvcache.RemotePagePool` attached, reallocation
 pressure that would destroy retained prefix-cache pages instead *lends*
@@ -152,6 +175,12 @@ class Request:
     # prompt on re-admission, so a preempted stream resumes token-exactly
     resume: list[int] = field(default_factory=list)
     shed: bool = False     # dropped by the scheduler, not completed
+    # sampling: temperature 0 is greedy (the deterministic default);
+    # temperature > 0 draws per-position Gumbel noise from ``seed`` so a
+    # sampled stream is still a pure function of (prompt, seed) — forked
+    # fan-out children differ only in their seeds
+    temperature: float = 0.0
+    seed: int = 0
     generated: list[int] = field(default_factory=list)
     slot: int | None = None
     done: bool = False
@@ -256,6 +285,9 @@ class ServeEngine:
         decode_step_s: float = 5e-3,
         active_cap: int | None = None,
         scheduler: SchedulerConfig | None = None,
+        draft: ModelFns | None = None,
+        draft_params: Pytree | None = None,
+        spec_k: int = 4,
     ):
         self.model = model
         self.params = params
@@ -287,6 +319,40 @@ class ServeEngine:
         # written once per request by the encoder (enc-dec)
         self._mm = getattr(model, "paged_mm_inline", False)
         self.cross = paged and model.supports_paged_cross
+        # speculative decoding: a paired draft model proposes spec_k
+        # tokens per step; the target verifies the whole window in one
+        # chunked paged forward pass. The draft's paged cache leaves ride
+        # inside self.cache under a draft_ prefix, addressed by the SAME
+        # page tables / pool pages as the target — so COW, prefix sharing,
+        # spill and snapshots cover the draft cache with no extra
+        # bookkeeping (every *_pages helper matches the suffix).
+        self._draft = draft
+        self.draft_params = draft_params
+        self.spec_k = spec_k
+        if draft is not None:
+            if not paged:
+                raise ValueError("speculative decoding needs the paged cache")
+            if self._mm or model.supports_paged_cross:
+                raise ValueError(
+                    "speculative decoding covers text-only paged families"
+                )
+            if not model.supports_spec_decode:
+                raise ValueError(
+                    f"{model.cfg.arch_id}: family has no paged verify path"
+                )
+            if not draft.supports_spec_decode:
+                raise ValueError(
+                    f"{draft.cfg.arch_id}: draft family cannot share paged "
+                    "decode state"
+                )
+            if draft.cfg.vocab_size != model.cfg.vocab_size:
+                raise ValueError(
+                    f"draft vocab {draft.cfg.vocab_size} != target vocab "
+                    f"{model.cfg.vocab_size}: accepted draft tokens must be "
+                    "target tokens"
+                )
+            if spec_k < 1:
+                raise ValueError("spec_k must be >= 1")
         self.lengths = np.zeros((n_slots,), np.int32)
         self.last_token = np.zeros((n_slots,), np.int32)
         self.slot_req: list[int | None] = [None] * n_slots
@@ -322,6 +388,13 @@ class ServeEngine:
             "shed_expired": 0,            # waiting requests past deadline
             "shed_overflow": 0,           # waiting requests over max_queue
             "resume_mismatches": 0,       # resumed recompute != committed
+            # speculative decoding (zero without a draft model)
+            "spec_rounds": 0,             # lane-rounds of draft+verify
+            "spec_proposed": 0,           # draft tokens proposed
+            "spec_accepted": 0,           # draft tokens the target accepted
+            # sampling fan-out (fork)
+            "forks": 0,                   # children forked off live slots
+            "fork_shared_pages": 0,       # full pages children share (logical)
         }
 
         if paged:
@@ -373,13 +446,71 @@ class ServeEngine:
             self.slot_hold = np.zeros((n_slots,), np.int32)
             self.cache = init_paged_cache(model, n_slots, self.n_pages,
                                           page_size, cache_dtype)
-            self._decode_paged = jax.jit(model.decode_paged)
-            self._prefill_chunk = jax.jit(
-                model.prefill_chunk,
-                static_argnames=(
-                    ("offset", "mm_len") if self._mm else ("offset",)
-                ),
-            )
+            if draft is not None:
+                # same n_slots / n_pages / page_size: physical page ids in
+                # the target's page tables address the draft leaves too
+                dcache = init_paged_cache(draft, n_slots, self.n_pages,
+                                          page_size, cache_dtype)
+                for k, v in dcache.items():
+                    self.cache["draft_" + k] = v
+
+                # both models' fns rebuild their cache dict, so each side
+                # runs on its own view and the other side's leaves are
+                # carried through unchanged
+                def _split(cache):
+                    t = {k: v for k, v in cache.items()
+                         if not k.startswith("draft_")}
+                    d = {k[6:]: v for k, v in cache.items()
+                         if k.startswith("draft_")}
+                    return t, d
+
+                def _join(t, d):
+                    out = dict(t)
+                    out.update({"draft_" + k: v for k, v in d.items()})
+                    return out
+
+                def _d_decode(dparams, cache, batch):
+                    t, d = _split(cache)
+                    logits, d = draft.decode_paged(dparams, d, batch)
+                    return logits, _join(t, d)
+
+                def _d_prefill(dparams, cache, batch, *, offset):
+                    t, d = _split(cache)
+                    _, d = draft.prefill_chunk(dparams, d, batch,
+                                               offset=offset)
+                    return _join(t, d)
+
+                def _t_decode(params, cache, batch):
+                    t, d = _split(cache)
+                    logits, t = model.decode_paged(params, t, batch)
+                    return logits, _join(t, d)
+
+                def _t_prefill(params, cache, batch, *, offset):
+                    t, d = _split(cache)
+                    logits, t = model.prefill_chunk(params, t, batch,
+                                                    offset=offset)
+                    return logits, _join(t, d)
+
+                def _t_verify(params, cache, batch):
+                    t, d = _split(cache)
+                    logits, t = model.verify_paged(params, t, batch)
+                    return logits, _join(t, d)
+
+                self._draft_decode = jax.jit(_d_decode)
+                self._draft_prefill = jax.jit(_d_prefill,
+                                              static_argnames=("offset",))
+                self._verify_paged = jax.jit(_t_verify)
+                self._decode_paged = jax.jit(_t_decode)
+                self._prefill_chunk = jax.jit(_t_prefill,
+                                              static_argnames=("offset",))
+            else:
+                self._decode_paged = jax.jit(model.decode_paged)
+                self._prefill_chunk = jax.jit(
+                    model.prefill_chunk,
+                    static_argnames=(
+                        ("offset", "mm_len") if self._mm else ("offset",)
+                    ),
+                )
             # donate the cache: COW duplicates one page in place instead
             # of materializing a second copy of every page pool
             self._copy_pages = jax.jit(_copy_pages, donate_argnums=(0,))
@@ -489,7 +620,8 @@ class ServeEngine:
     def submit(self, prompt: list[int], *, max_new_tokens: int = 16,
                eos_id: int | None = None, extra: dict | None = None,
                priority: int = 0,
-               deadline_ms: float | None = None) -> Request:
+               deadline_ms: float | None = None,
+               temperature: float = 0.0, seed: int = 0) -> Request:
         extra = dict(extra or {})
         probe = Request(-1, list(prompt), max_new_tokens, eos_id, extra)
         allowed = ({"embeds"} if self._mm else set()) | (
@@ -531,7 +663,8 @@ class ServeEngine:
                 )
         req = Request(self._req_counter, list(prompt), max_new_tokens, eos_id,
                       extra, priority=priority, deadline_ms=deadline_ms,
-                      arrival_step=self.steps)
+                      arrival_step=self.steps,
+                      temperature=temperature, seed=seed)
         if deadline_ms is not None:
             self._has_deadlines = True
         self._req_counter += 1
@@ -598,13 +731,20 @@ class ServeEngine:
         if self.paged and not self.sched.cfg.synchronous:
             self._shed_pass()
             self._admission_scan()
-            lanes = sum(
-                1 for i, r in enumerate(self.slot_req)
+            lanes = [
+                i for i, r in enumerate(self.slot_req)
                 if r is not None and i not in self.prefilling
                 and not self.slot_hold[i]
-            )
+            ]
+            # a speculating lane consumes a whole draft+verify window of
+            # the step's token budget, not one token — prefill gets what
+            # is left after that reservation
+            per_lane = (self._spec_tokens_per_lane()
+                        if force_tokens is None and self._spec_feasible(lanes)
+                        else 1)
             prefill_used = self._pump_prefill(
-                self.sched.prefill_budget(lanes, bool(self.prefilling))
+                self.sched.prefill_budget(len(lanes), bool(self.prefilling),
+                                          tokens_per_lane=per_lane)
             )
             self._preempt_pass()
         else:
@@ -627,6 +767,16 @@ class ServeEngine:
         if not active:
             self.last_step_tokens = prefill_used
             return 0
+        if force_tokens is None and self._spec_feasible(active):
+            # speculative rounds complete within one step(): spec holds no
+            # cross-step state, so snapshot/preempt/cancel never see a
+            # half-verified draft
+            self._spec_step(active)
+            self.steps += 1
+            self.last_step_tokens = (
+                prefill_used + len(active) * self._spec_tokens_per_lane()
+            )
+            return len(active)
         tokens = jnp.asarray(self.last_token)[:, None]
         positions = jnp.asarray(self.lengths)
         if self.paged:
@@ -640,32 +790,34 @@ class ServeEngine:
                 batch["cross_len"] = jnp.asarray(self.cross_len)
             logits, self.cache = self._decode_paged(self.params, self.cache,
                                                     batch)
+            if self._draft is not None:
+                # keep the draft cache position-complete through
+                # non-speculative steps (forced replay, budget fallback):
+                # draft K/V holes would only degrade later proposals, but
+                # there is no reason to accept the degradation
+                _, self.cache = self._draft_decode(self.draft_params,
+                                                   self.cache, batch)
         else:
             logits, self.cache = self._decode(
                 self.params, self.cache,
                 {"tokens": tokens, "positions": positions},
             )
         next_tokens = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        rows = (np.asarray(logits, np.float32)
+                if self._any_sampled(active) else None)
         for i in active:
             req = self.requests[self.slot_req[i]]
-            tok = int(next_tokens[i])
+            if rows is not None and req.temperature > 0:
+                tok = self._choose(rows[i], req, int(self.lengths[i]))
+            else:
+                tok = int(next_tokens[i])
             if force_tokens is not None and i in force_tokens:
                 forced = int(force_tokens[i])
                 self.stats["forced_tokens"] += 1
                 if forced != tok:
                     self.stats["forced_mismatches"] += 1
                 tok = forced
-            req.generated.append(tok)
-            self.lengths[i] += 1
-            self.last_token[i] = tok
-            if (
-                (req.eos_id is not None and tok == req.eos_id)
-                or len(req.generated) >= req.max_new_tokens
-                or self.lengths[i] >= self.max_seq - 1
-            ):
-                req.done = True
-                req.slot = None
-                self._release_slot(i)
+            self._commit_token(i, req, tok)
         self.steps += 1
         self.last_step_tokens = prefill_used + len(active)
         return len(active)
@@ -675,6 +827,239 @@ class ServeEngine:
             self.step()
             max_steps -= 1
         return [r for r in self.requests.values() if r.done]
+
+    # ------------------------------------------------- speculation / sampling
+    def _spec_tokens_per_lane(self) -> int:
+        """Step-budget cost of one speculating lane: k draft proposals,
+        one draft cache-fill step (position n+k, so a fully accepted
+        window leaves no draft K/V hole), and a k+1-token verify."""
+        return 2 * self.spec_k + 2
+
+    def _spec_feasible(self, lanes: list[int]) -> bool:
+        """Speculate this step? Needs a draft, every lane at least
+        ``spec_k + 1`` positions from the sequence cap (the verify window
+        must never write past ``max_seq``), and — under a continuous
+        scheduler — a token budget that covers every lane's window
+        (otherwise the step falls back to plain decode; the synchronous
+        mode always speculates)."""
+        if self._draft is None or not lanes:
+            return False
+        k = self.spec_k
+        if any(self.lengths[i] + k + 1 >= self.max_seq for i in lanes):
+            return False
+        if self.sched.cfg.synchronous:
+            return True
+        return (len(lanes) * self._spec_tokens_per_lane()
+                <= self.sched.cfg.token_budget)
+
+    def _any_sampled(self, lanes: list[int]) -> bool:
+        return any(self.requests[self.slot_req[i]].temperature > 0
+                   for i in lanes)
+
+    @staticmethod
+    def _choose(row: np.ndarray, req: Request, pos: int) -> int:
+        """The committed token for logits ``row`` computed at cache
+        position ``pos``: greedy argmax at temperature 0, else argmax of
+        ``row/T`` plus Gumbel noise drawn deterministically from
+        ``(seed, pos)`` — the Gumbel-max trick samples the softmax, and
+        keying the noise by *position* (not sampling history) makes a
+        sampled stream re-derivable token-for-token by the speculative
+        verify window and by preemption resume alike."""
+        if req.temperature <= 0:
+            return int(np.argmax(row))
+        rng = np.random.default_rng([int(req.seed) & 0xFFFFFFFF, int(pos)])
+        u = rng.random(row.shape[-1])
+        g = -np.log(-np.log(u + 1e-20) + 1e-20)
+        return int(np.argmax(row.astype(np.float64) / req.temperature + g))
+
+    def _commit_token(self, i: int, req: Request, tok: int) -> bool:
+        """Append one committed token to lane ``i``; returns True when
+        the request completed (slot released)."""
+        req.generated.append(tok)
+        self.lengths[i] += 1
+        self.last_token[i] = tok
+        if (
+            (req.eos_id is not None and tok == req.eos_id)
+            or len(req.generated) >= req.max_new_tokens
+            or self.lengths[i] >= self.max_seq - 1
+        ):
+            self._finish_request(i, req)
+            return True
+        return False
+
+    def _finish_request(self, i: int, req: Request) -> None:
+        """Completion: register the slot's pages — prompt *and* decode-
+        generated — in the prefix trie before release, so a later prompt
+        that extends this request's transcript (the multi-turn pattern)
+        shares pages up to the divergence point instead of stopping at
+        the old prompt boundary. Only fully committed pages are keyed
+        (``lengths // page_size``), so a page's stale tail beyond the
+        last committed token is never served as cached content."""
+        if self.paged and self.prefix_share:
+            covered = int(self.lengths[i])
+            gen = req.generated[: covered - self._total_len(req)]
+            self._register_prefix(
+                self._key_tokens(req) + self._gen_keys(req, gen),
+                self.slot_pages[i],
+            )
+        req.done = True
+        req.slot = None
+        self._release_slot(i)
+
+    def _spec_step(self, active: list[int]) -> None:
+        """One speculative round for every active lane, batched.
+
+        With ``lengths[i] = n``: the draft proposes ``d1..dk`` by k
+        sequential paged decode steps feeding ``[last, d1..d_{k-1}]`` at
+        positions ``n..n+k-1`` (plus one cache-fill step for ``d_k`` at
+        ``n+k``), then the target verifies the whole window
+        ``[last, d1..dk]`` in ONE chunked paged forward pass whose fold
+        is bitwise identical to k+1 sequential decode steps — logits
+        ``L_0..L_k`` with ``g_{j+1}`` chosen from ``L_j``. The longest
+        prefix with ``d_j == g_j`` is accepted and ``g_1..g_{a+1}``
+        commit (1..k+1 tokens). Rejection rolls back by *page offset*:
+        lengths simply stop at ``n+a+1``; stale K/V beyond that sits past
+        every length mask and is rewritten in order before any read
+        reaches it (the same scratch-row isolation rules as prefill —
+        table entries beyond a lane's chain stay on the scratch page).
+
+        Held / prefilling / idle lanes ride through the batched calls
+        exactly as in plain decode: scratch-page writes for unbound
+        rows, rewritten-before-read positions for held ones."""
+        k = self.spec_k
+        n0 = self.lengths.copy()
+        table = jnp.asarray(self.page_table)
+        sampled = self._any_sampled(active)
+        toks = self.last_token.copy()
+        pos = self.lengths.copy()
+        draft_toks = np.zeros((self.n_slots, k), np.int32)
+        for j in range(k + 1):
+            batch = {
+                "tokens": jnp.asarray(toks)[:, None],
+                "positions": jnp.asarray(pos),
+                "page_table": table,
+            }
+            dlogits, self.cache = self._draft_decode(self.draft_params,
+                                                     self.cache, batch)
+            if j < k:
+                nxt = np.array(jnp.argmax(dlogits, axis=-1), np.int32)
+                if sampled:
+                    # the draft guesses with the lane's own noise: if the
+                    # draft models the target well, its sampled guess is
+                    # the target's sampled choice
+                    drows = np.asarray(dlogits, np.float32)
+                    for i in active:
+                        req = self.requests[self.slot_req[i]]
+                        if req.temperature > 0:
+                            nxt[i] = self._choose(drows[i], req, int(pos[i]))
+                draft_toks[:, j] = nxt
+                toks = nxt
+            pos = pos + 1
+        window = np.concatenate([self.last_token[:, None], draft_toks],
+                                axis=1)  # (n_slots, k+1)
+        vbatch = {
+            "tokens": jnp.asarray(window),
+            "positions": jnp.asarray(n0),
+            "page_table": table,
+        }
+        vlogits, self.cache = self._verify_paged(self.params, self.cache,
+                                                 vbatch)
+        greedy = np.asarray(jnp.argmax(vlogits, axis=-1), np.int32)
+        vrows = np.asarray(vlogits, np.float32) if sampled else None
+        for i in active:
+            req = self.requests[self.slot_req[i]]
+            base = int(n0[i])
+            if vrows is not None and req.temperature > 0:
+                target = [self._choose(vrows[i, j], req, base + j)
+                          for j in range(k + 1)]
+            else:
+                target = [int(greedy[i, j]) for j in range(k + 1)]
+            a = 0
+            while a < k and int(draft_toks[i, a]) == target[a]:
+                a += 1
+            self.stats["spec_rounds"] += 1
+            self.stats["spec_proposed"] += k
+            self.stats["spec_accepted"] += a
+            for tok in target[: a + 1]:
+                if self._commit_token(i, req, tok):
+                    break
+
+    def fork(self, req_id: int, n: int, *, temperature: float = 1.0,
+             seeds: list[int] | None = None) -> list[Request]:
+        """Fork ``n`` sampling children off a live decode slot.
+
+        Each child continues the parent's stream from its current
+        position: every *full* committed page — prompt AND decode-
+        generated — is shared copy-on-write (refcount bump, zero copies),
+        the partially filled last page is COW-copied, and only the
+        remaining capacity is privately allocated. Children then diverge
+        through their own ``(temperature, seed)`` sampling; the physical
+        pages up to the fork point stay shared for their whole lifetime
+        (they are read-only — every lane writes only at positions past
+        its fork length).
+
+        Requires ``n`` free slots and enough free pages; raises
+        ``ValueError`` (no side effects) otherwise."""
+        assert self.paged, "fork needs the paged cache"
+        req = self.requests[req_id]
+        slot = req.slot
+        if slot is None or slot in self.prefilling:
+            raise ValueError("fork needs an active decode slot")
+        free = [i for i, r in enumerate(self.slot_req) if r is None]
+        if len(free) < n:
+            raise ValueError(f"fork of {n} needs {n} free slots, "
+                             f"have {len(free)}")
+        P = self.page_size
+        chain = self.slot_pages[slot]
+        length = int(self.lengths[slot])
+        full = length // P
+        partial = length % P != 0
+        need = pages_needed(
+            min(self._total_len(req) + req.max_new_tokens, self.max_seq), P
+        )
+        priv_n = need - full
+        if n * priv_n > self.pool.available:
+            raise ValueError(
+                f"fork of {n} needs {n * priv_n} pages, "
+                f"have {self.pool.available}"
+            )
+        seeds = list(seeds) if seeds is not None else list(range(n))
+        if len(seeds) != n:
+            raise ValueError(f"need {n} seeds, got {len(seeds)}")
+        children: list[Request] = []
+        for c, seed in zip(free[:n], seeds):
+            child = Request(
+                self._req_counter, list(req.prompt), req.max_new_tokens,
+                req.eos_id, dict(req.extra), priority=req.priority,
+                arrival_step=self.steps, temperature=temperature, seed=seed,
+            )
+            self._req_counter += 1
+            child.generated = list(req.generated)
+            self.requests[child.req_id] = child
+            self.pool.share(chain[:full])
+            priv = self.pool.alloc(priv_n)
+            assert priv is not None  # guaranteed by the pre-check
+            self._retire_cached(priv)
+            if partial:
+                self.cache = self._copy_pages(
+                    self.cache, jnp.asarray(chain[full], jnp.int32),
+                    jnp.asarray(priv[0], jnp.int32),
+                )
+                self.stats["cow_copies"] += 1
+            cchain = chain[:full] + priv
+            self.slot_pages[c] = cchain
+            self.page_table[c, :] = 0
+            self.page_table[c, : len(cchain)] = cchain
+            self.lengths[c] = length
+            self.last_token[c] = self.last_token[slot]
+            self.slot_req[c] = child.req_id
+            child.slot = c
+            self.stats["forks"] += 1
+            self.stats["fork_shared_pages"] += full
+            children.append(child)
+        self.stats["peak_pages"] = max(self.stats["peak_pages"],
+                                       self.pool.outstanding)
+        return children
 
     # ----------------------------------------------------------------- admit
     def _admit(self) -> int:
@@ -1287,6 +1672,10 @@ class ServeEngine:
                 batch["cross_len"] = jnp.asarray(self.cross_len)
             logits, self.cache = self._decode_paged(self.params, self.cache,
                                                     batch)
+            if self._draft is not None:
+                # the recomputed final prompt token needs its draft K/V too
+                _, self.cache = self._draft_decode(self.draft_params,
+                                                   self.cache, batch)
             first = int(np.asarray(jnp.argmax(logits[slot])))
             self._finish_prefill(slot, req, key_tokens, chain, first, tlen)
             return
@@ -1348,6 +1737,14 @@ class ServeEngine:
             task.logits, self.cache = self._prefill_chunk(
                 self.params, self.cache, batch, **kw
             )
+            if self._draft is not None:
+                # the draft rides every prefill chunk: its K/V for the
+                # prompt lands in the same pages, so shared/COW'd prefixes
+                # arrive draft-complete (batch is identical — draft
+                # families are text-only, no mm/cross extras)
+                self.cache = self._draft_prefill(self.draft_params,
+                                                 self.cache, batch,
+                                                 offset=off)
             task.offset += n
             used += n
         if task.offset >= task.tlen:
@@ -1478,6 +1875,8 @@ class ServeEngine:
                     "deadline_ms": r.deadline_ms,
                     "arrival_step": r.arrival_step,
                     "resume": r.resume,
+                    "temperature": r.temperature,
+                    "seed": r.seed,
                 }
                 for r in self.requests.values()
             },
@@ -1619,6 +2018,8 @@ class ServeEngine:
             req.deadline_ms = kv.get("deadline_ms")
             req.arrival_step = int(kv.get("arrival_step", 0))
             req.resume = list(kv.get("resume", []))
+            req.temperature = float(kv.get("temperature", 0.0))
+            req.seed = int(kv.get("seed", 0))
             if req.deadline_ms is not None:
                 self._has_deadlines = True
             self.requests[req.req_id] = req

@@ -176,11 +176,15 @@ class Scheduler:
         return ranked[self.cfg.max_queue:]
 
     # ---------------------------------------------------------------- budget
-    def prefill_budget(self, n_decode_lanes: int, prefilling: bool) -> int:
+    def prefill_budget(self, n_decode_lanes: int, prefilling: bool,
+                       tokens_per_lane: int = 1) -> int:
         """Prefill tokens allowed this step after decode lanes reserve
-        theirs. Guarantees minimal progress (one chunk's worth is granted
+        theirs — one token each for plain decode, a whole draft+verify
+        window (``tokens_per_lane``) each when the engine speculates this
+        step. Guarantees minimal progress (one chunk's worth is granted
         by the engine when a prefill is mid-flight and the budget is
         exhausted) via the ``prefilling`` flag at the call site."""
         assert self.cfg.token_budget is not None
         del prefilling
-        return max(0, self.cfg.token_budget - n_decode_lanes)
+        return max(0, self.cfg.token_budget
+                   - n_decode_lanes * tokens_per_lane)

@@ -20,6 +20,23 @@ def _serving_rows():
     ]
 
 
+def _spec_rows():
+    return [
+        {"bench": "spec-decode", "engine": "plain",
+         "tokens_per_step": 4.0, "acceptance_rate": "", "parity": ""},
+        {"bench": "spec-decode", "engine": "spec-self",
+         "tokens_per_step": 20.0, "acceptance_rate": 1.0,
+         "spec_rounds": 24, "parity": True},
+        {"bench": "spec-decode", "engine": "spec-pair",
+         "tokens_per_step": 4.0, "acceptance_rate": 0.0,
+         "spec_rounds": 120, "parity": True},
+        {"bench": "spec-decode", "engine": "fork", "fanout": 1,
+         "latency_ms_per_req": 30.0, "page_sharing_ratio": 1.0},
+        {"bench": "spec-decode", "engine": "fork", "fanout": 4,
+         "latency_ms_per_req": 9.0, "page_sharing_ratio": 2.0},
+    ]
+
+
 def _batch_row():
     return {"bench": "batch-churn", "parity": True, "reissued": 3,
             "quorum_failures": 1, "reissued_timeout": 2,
@@ -44,6 +61,7 @@ def _latency_row():
 
 def test_good_rows_pass():
     assert cb.check_serving(_serving_rows()).startswith("OK")
+    assert cb.check_spec_decode(_spec_rows()).startswith("OK")
     assert cb.check_batch_churn([_batch_row()]).startswith("OK")
     assert cb.check_cell_churn([_cell_row()]).startswith("OK")
     assert cb.check_latency([_latency_row()]).startswith("OK")
@@ -58,6 +76,35 @@ def test_serving_rejects_parity_failure_and_missing_scenarios():
         cb.check_serving(_serving_rows()[:2])
     with pytest.raises(AssertionError, match="no rows|parity rows"):
         cb.check_serving([{"bench": "serving", "match": ""}])
+
+
+@pytest.mark.parametrize("engine,field,value,msg", [
+    ("spec-self", "parity", False, "changed tokens"),
+    ("spec-pair", "parity", False, "changed tokens"),
+    ("spec-self", "acceptance_rate", 0.0, "acceptance"),
+    ("spec-self", "acceptance_rate", 0.5, "accept everything"),
+    ("spec-self", "spec_rounds", 0, "no spec round"),
+    ("spec-self", "tokens_per_step", 4.0, "extra tokens/step"),
+    ("spec-pair", "acceptance_rate", 1.0, "out of range"),
+])
+def test_spec_decode_rejects_weakened_counters(engine, field, value, msg):
+    rows = _spec_rows()
+    next(r for r in rows if r["engine"] == engine)[field] = value
+    with pytest.raises(AssertionError, match=msg):
+        cb.check_spec_decode(rows)
+
+
+def test_spec_decode_rejects_unshared_fanout_and_missing_rows():
+    rows = _spec_rows()
+    rows[-1]["page_sharing_ratio"] = 1.0
+    with pytest.raises(AssertionError, match="share pages"):
+        cb.check_spec_decode(rows)
+    with pytest.raises(AssertionError, match="no 'fork'"):
+        cb.check_spec_decode(_spec_rows()[:3])
+    with pytest.raises(AssertionError, match="fan-out > 1"):
+        cb.check_spec_decode(_spec_rows()[:4])
+    with pytest.raises(AssertionError, match="no 'spec-decode' rows"):
+        cb.check_spec_decode(_serving_rows())
 
 
 @pytest.mark.parametrize("field,value,msg", [

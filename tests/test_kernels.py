@@ -1,14 +1,17 @@
 """Pallas kernel sweeps: shapes × dtypes vs the pure-jnp oracles.
 
 All kernels run in ``interpret=True`` (CPU) and must match ``ref.py``
-within dtype-appropriate tolerances.
+within dtype-appropriate tolerances. The ``ops.py`` dispatch layer is
+additionally swept over both CPU backends (``xla`` fallbacks and
+``pallas_interpret``) in-process, so a drift in the non-default path
+fails regardless of ``REPRO_KERNEL_BACKEND``.
 """
 
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels import ref
+from repro.kernels import ops, ref
 from repro.kernels.decode_attention import decode_attention
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.rmsnorm import rmsnorm
@@ -125,25 +128,76 @@ def test_ssd(b, s, hs, p, n, chunk, dtype):
                                atol=5e-3, rtol=5e-3)
 
 
-class TestXlaPathMatchesOracle:
-    """The XLA fallbacks in ops.py are algorithmically identical blocked
-    implementations — they must match the oracles too."""
+def _paged_case(b=3, w=4, h=4, k=2, d=16, p=8, max_pages=4, n_pages=16,
+                dtype=jnp.float32):
+    """A shared page pool with per-sequence page tables: distinct non-zero
+    physical pages per row (page 0 is the engine's scratch page) and
+    window start positions leaving room for ``w`` queries."""
+    q = rand((b, w, h, d), dtype)
+    kp = rand((n_pages, p, k, d), dtype)
+    vp = rand((n_pages, p, k, d), dtype)
+    table = np.stack([
+        RNG.choice(np.arange(1, n_pages), max_pages, replace=False)
+        for _ in range(b)
+    ]).astype(np.int32)
+    positions = jnp.asarray(
+        RNG.integers(0, p * max_pages - w + 1, b), jnp.int32)
+    return q, kp, vp, jnp.asarray(table), positions
 
-    def test_flash_xla(self):
-        from repro.kernels import ops
 
+@pytest.mark.parametrize("backend", ["xla", "pallas_interpret"])
+class TestOpsMatchOracle:
+    """Every dispatchable ops.py entry point must match the oracles under
+    BOTH CPU backends: the XLA fallbacks are algorithmically identical
+    blocked implementations, and the Pallas kernels run in interpret
+    mode — so a drift in either path (not just the local default) fails
+    tier-1."""
+
+    def test_flash(self, backend):
         q = rand((2, 37, 6, 16), jnp.float32)
         k = rand((2, 37, 2, 16), jnp.float32)
         v = rand((2, 37, 2, 16), jnp.float32)
-        with ops.use_backend("xla"):
+        with ops.use_backend(backend):
             got = ops.attention(q, k, v, causal=True, block_q=16, block_k=16)
         want = ref.attention(q, k, v, causal=True)
         np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                    atol=2e-5, rtol=2e-5)
 
-    def test_scan_chunked_xla(self):
-        from repro.kernels import ops
+    def test_paged_decode(self, backend):
+        q, kp, vp, table, positions = _paged_case(w=1)
+        lengths = positions + 1
+        with ops.use_backend(backend):
+            got = ops.paged_decode_attention(q[:, 0], kp, vp, table, lengths)
+        want = ref.paged_decode_attention(q[:, 0], kp, vp, table, lengths)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=2e-5, rtol=2e-5)
 
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_paged_verify(self, backend, dtype):
+        q, kp, vp, table, positions = _paged_case(dtype=dtype)
+        with ops.use_backend(backend):
+            got = ops.paged_verify_attention(q, kp, vp, table, positions)
+        want = ref.paged_verify_attention(q, kp, vp, table, positions)
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want, np.float32),
+            **tol(dtype)
+        )
+
+    def test_paged_verify_equals_sequential_decode(self, backend):
+        """The verify window is W decode steps in one call: query j must
+        equal a single-token paged decode at length positions + j + 1 —
+        the kernel-level face of the engine's exactness guarantee."""
+        q, kp, vp, table, positions = _paged_case()
+        with ops.use_backend(backend):
+            window = ops.paged_verify_attention(q, kp, vp, table, positions)
+            for j in range(q.shape[1]):
+                step = ops.paged_decode_attention(
+                    q[:, j], kp, vp, table, positions + j + 1)
+                np.testing.assert_allclose(
+                    np.asarray(window[:, j]), np.asarray(step),
+                    atol=2e-6, rtol=2e-6)
+
+    def test_scan_chunked(self, backend):
         b, s, di, n = 2, 50, 12, 6
         x = rand((b, s, di), jnp.float32, 0.5)
         dt = jnp.asarray(np.abs(RNG.standard_normal((b, s, di))) * 0.1,
@@ -153,7 +207,7 @@ class TestXlaPathMatchesOracle:
         Bm = rand((b, s, n), jnp.float32, 0.5)
         C = rand((b, s, n), jnp.float32, 0.5)
         D = rand((di,), jnp.float32)
-        with ops.use_backend("xla"):
+        with ops.use_backend(backend):
             y, hT = ops.selective_scan(x, dt, A, Bm, C, D, chunk=16)
         yw, hw = ref.selective_scan(x, dt, A, Bm, C, D)
         np.testing.assert_allclose(np.asarray(y), np.asarray(yw),
@@ -161,9 +215,7 @@ class TestXlaPathMatchesOracle:
         np.testing.assert_allclose(np.asarray(hT), np.asarray(hw),
                                    atol=1e-4, rtol=1e-4)
 
-    def test_ssd_chunked_xla(self):
-        from repro.kernels import ops
-
+    def test_ssd_chunked(self, backend):
         b, s, hs, p, n = 1, 33, 2, 8, 4
         x = rand((b, s, hs, p), jnp.float32, 0.5)
         dt = jnp.asarray(np.abs(RNG.standard_normal((b, s, hs))) * 0.1,
@@ -172,7 +224,7 @@ class TestXlaPathMatchesOracle:
         Bm = rand((b, s, n), jnp.float32, 0.5)
         C = rand((b, s, n), jnp.float32, 0.5)
         D = rand((hs,), jnp.float32)
-        with ops.use_backend("xla"):
+        with ops.use_backend(backend):
             y, hT = ops.ssd(x, dt, A, Bm, C, D, chunk=16)
         yw, hw = ref.ssd(x, dt, A, Bm, C, D)
         np.testing.assert_allclose(np.asarray(y), np.asarray(yw),

@@ -14,6 +14,7 @@ from repro.checkpoint.serializer import (
     serialize_tree,
     split_into_shards,
 )
+from repro.serving.kvcache import PagePool
 from repro.training.straggler import rebalance_microbatches, step_time_sync
 
 
@@ -164,3 +165,112 @@ def test_rebalance_exact_and_no_worse_than_uniform(times, total):
         step_time_sync(times, alloc)
         <= step_time_sync(times, uniform) + 1e-9
     )
+
+
+# ---------------------------------------------------------------------------
+# PagePool refcount conservation
+# ---------------------------------------------------------------------------
+
+
+_POOL_OPS = st.lists(
+    st.tuples(
+        st.sampled_from(["admit", "fork", "revive", "release", "roundtrip"]),
+        st.integers(0, 10 ** 6),
+    ),
+    max_size=50,
+)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(6, 24), _POOL_OPS)
+def test_page_pool_refcount_conservation(n_pages, script):
+    """Random interleavings of the engine's page-pool traffic — admission
+    allocs, COW/fork prefix shares, decode-page trie revives, preemption
+    and completion frees, snapshot round-trips — conserve every pool
+    invariant: ``available + outstanding == n_pages - 1``, the pool's
+    refcount of every page equals the number of chains referencing it,
+    a page is never handed out while referenced (no double-alloc), a
+    failed alloc has no side effects, and no free is ever dropped."""
+    pool = PagePool(n_pages)
+    chains: list[list[int]] = []       # one per simulated slot
+    shadow: dict[int, int] = {}        # model refcounts
+    cached: list[int] = []             # freed-to-zero, contents retained
+
+    def check():
+        assert pool.available + pool.outstanding == n_pages - 1
+        for p in range(1, n_pages):
+            assert pool.refcount(p) == shadow.get(p, 0), p
+        assert all(r > 0 for r in pool._ref.values())
+
+    for kind, r in script:
+        if kind == "admit":
+            n = 1 + r % (n_pages - 1)  # sometimes exceeds available
+            before = pool.available
+            pages = pool.alloc(n)
+            if pages is None:
+                assert n > before, "alloc failed despite free pages"
+                assert pool.available == before, "failed alloc had effects"
+            else:
+                assert len(set(pages)) == n
+                for p in pages:
+                    # never handed out while still referenced
+                    assert shadow.get(p, 0) == 0, f"double-alloc of {p}"
+                    shadow[p] = 1
+                taken = set(pages)
+                cached = [p for p in cached if p not in taken]
+                chains.append(list(pages))
+        elif kind == "fork" and chains:
+            # a fork/COW shares a prefix of a live chain into a new slot
+            src = chains[r % len(chains)]
+            k = 1 + r % len(src)
+            pool.share(src[:k])
+            for p in src[:k]:
+                shadow[p] += 1
+            chains.append(src[:k])
+        elif kind == "revive" and cached:
+            # a prefix-trie hit revives freed-but-cached pages
+            k = 1 + r % len(cached)
+            pages = cached[:k]
+            pool.share(pages)
+            for p in pages:
+                assert shadow.get(p, 0) == 0
+                shadow[p] = 1
+            cached = cached[k:]
+            chains.append(list(pages))
+        elif kind == "release" and chains:
+            # completion/preemption drops one reference per chain page
+            chain = chains.pop(r % len(chains))
+            pool.free(chain)
+            for p in chain:
+                shadow[p] -= 1
+                if shadow[p] == 0:
+                    del shadow[p]
+                    cached.append(p)
+        elif kind == "roundtrip":
+            # serialize → restore into a fresh pool mid-sequence
+            free, ref, touch = pool.serialize()
+            fresh = PagePool(n_pages)
+            fresh.restore(free, ref, touch)
+            pool = fresh
+        check()
+
+    # drain everything: the pool must return to its initial state
+    for chain in chains:
+        pool.free(chain)
+    assert pool.outstanding == 0
+    assert pool.available == n_pages - 1
+
+
+def test_page_pool_guards():
+    """The conservation property leans on the pool's own assertions; they
+    must actually fire."""
+    pool = PagePool(4)
+    pages = pool.alloc(2)
+    pool.free(pages)
+    with pytest.raises(AssertionError, match="double free"):
+        pool.free([pages[0]])
+    with pytest.raises(AssertionError, match="invalid page"):
+        pool.share([0])
+    before = pool.available
+    assert pool.alloc(99) is None
+    assert pool.available == before

@@ -1,0 +1,319 @@
+"""Speculative decoding: the exactness harness.
+
+The non-negotiable gate: greedy speculative decode must match
+non-speculative decode **token-for-token** — speculation is a latency
+optimization, never a sampling change. Covered here:
+
+- parity across the paged families that support verify (dense + MoE),
+  under both kernel backends;
+- a rollback sweep forcing the draft to diverge at every window offset
+  (0..k), checking both the committed stream and the exact acceptance
+  accounting;
+- preemption of a speculating lane round-trips token-exactly;
+- snapshot → restore of a speculating engine mid-generation;
+- scheduler budget fallback (a window that does not fit the step budget
+  degrades to plain decode, never to wrong tokens);
+- fork fan-out: children share every full committed page copy-on-write
+  and diverge only through their seeds;
+- decode-page trie registration: a prompt extending a finished
+  transcript shares past the old prompt boundary.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import REDUCED, draft_for
+from repro.kernels import ops
+from repro.models import get_model
+from repro.serving.engine import ServeEngine
+from repro.serving.scheduler import SchedulerConfig
+
+SPEC_K = 3
+
+
+@functools.lru_cache(maxsize=None)
+def _pair(arch):
+    cfg = REDUCED[arch]
+    dcfg = draft_for(arch, reduced=True)
+    model = get_model(cfg)
+    params = model.init(jax.random.key(0))
+    draft = get_model(dcfg)
+    dparams = draft.init(jax.random.key(1))
+    return cfg, model, params, draft, dparams
+
+
+def _prompts(cfg, lens, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(1, cfg.vocab_size, n).tolist() for n in lens]
+
+
+def _engine(model, params, *, sync=False, n_slots=2, **kw):
+    kw.setdefault("max_seq", 96)
+    kw.setdefault("page_size", 16)
+    kw.setdefault("prefill_chunk", 32)
+    if sync:
+        kw.setdefault("scheduler", SchedulerConfig(token_budget=None))
+    return ServeEngine(model, params, n_slots=n_slots, paged=True, **kw)
+
+
+def _drain(engine, prompts, *, max_new=8, temps=None, seeds=None):
+    for j, p in enumerate(prompts):
+        engine.submit(p, max_new_tokens=max_new,
+                      temperature=temps[j] if temps else 0.0,
+                      seed=seeds[j] if seeds else 0)
+    done = sorted(engine.run(800), key=lambda r: r.req_id)
+    return [r.generated for r in done]
+
+
+# ---------------------------------------------------------------------------
+# Greedy parity: spec == non-spec, per family, per kernel backend
+# ---------------------------------------------------------------------------
+
+# one target per paged family with a verify path; qwen additionally runs
+# under the interpreted Pallas backend in-process (the CI tier-1 matrix
+# re-runs the whole file under REPRO_KERNEL_BACKEND=pallas_interpret too)
+PARITY_CASES = [
+    ("qwen3-8b", "xla"),
+    ("qwen3-8b", "pallas_interpret"),
+    ("deepseek-moe-16b", "xla"),
+]
+
+
+@pytest.mark.parametrize("arch,backend", PARITY_CASES)
+def test_spec_matches_plain_greedy(arch, backend):
+    cfg, model, params, draft, dparams = _pair(arch)
+    prompts = _prompts(cfg, [32, 17, 40, 5], seed=3)
+    with ops.use_backend(backend):
+        base = _drain(_engine(model, params), prompts)
+        spec_eng = _engine(model, params, draft=draft, draft_params=dparams,
+                          spec_k=SPEC_K)
+        got = _drain(spec_eng, prompts)
+    assert got == base
+    assert spec_eng.stats["spec_rounds"] > 0
+
+
+def test_spec_matches_plain_greedy_synchronous():
+    cfg, model, params, draft, dparams = _pair("qwen3-8b")
+    prompts = _prompts(cfg, [32, 17], seed=5)
+    base = _drain(_engine(model, params, sync=True), prompts)
+    spec_eng = _engine(model, params, sync=True, draft=draft,
+                       draft_params=dparams, spec_k=SPEC_K)
+    assert _drain(spec_eng, prompts) == base
+    assert spec_eng.stats["spec_rounds"] > 0
+
+
+def test_spec_sampled_stream_is_reproduced():
+    """Sampled lanes too: the (seed, position)-keyed Gumbel noise makes a
+    sampled stream a pure function of the logits, which the verify window
+    reproduces bitwise — so spec and non-spec sampled runs agree."""
+    cfg, model, params, draft, dparams = _pair("qwen3-8b")
+    prompts = _prompts(cfg, [32, 17, 23], seed=7)
+    temps, seeds = [0.8, 0.0, 1.3], [11, 0, 42]
+    base = _drain(_engine(model, params, n_slots=3), prompts,
+                  temps=temps, seeds=seeds)
+    got = _drain(_engine(model, params, n_slots=3, draft=draft,
+                         draft_params=dparams, spec_k=SPEC_K),
+                 prompts, temps=temps, seeds=seeds)
+    assert got == base
+
+
+def test_self_draft_accepts_everything():
+    """The target drafting for itself proposes its own argmax: every
+    draft token verifies, so acceptance is exactly 1 and each round
+    commits the full k+1 window (modulo completion clamps)."""
+    cfg, model, params, _, _ = _pair("qwen3-8b")
+    prompts = _prompts(cfg, [32, 17], seed=3)
+    base = _drain(_engine(model, params), prompts)
+    eng = _engine(model, params, draft=model, draft_params=params,
+                  spec_k=SPEC_K)
+    assert _drain(eng, prompts) == base
+    assert eng.stats["spec_proposed"] > 0
+    assert eng.stats["spec_accepted"] == eng.stats["spec_proposed"]
+
+
+# ---------------------------------------------------------------------------
+# Rollback sweep: force a reject at every window offset
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("reject_at", list(range(SPEC_K + 1)))
+def test_spec_rollback_at_every_offset(reject_at):
+    """Self-draft (proposals match the target) with the proposal at
+    offset ``reject_at`` flipped to a wrong token: the target must accept
+    exactly ``reject_at`` draft tokens per round and the committed stream
+    must still equal plain decode. ``reject_at == SPEC_K`` leaves the
+    window untouched (full acceptance)."""
+    cfg, model, params, _, _ = _pair("qwen3-8b")
+    prompts = _prompts(cfg, [17], seed=9)
+    base = _drain(_engine(model, params, sync=True), prompts)
+    eng = _engine(model, params, sync=True, draft=model,
+                  draft_params=params, spec_k=SPEC_K)
+    orig = eng._draft_decode
+    calls = {"n": 0}
+
+    def adversarial(dp, cache, batch):
+        logits, cache = orig(dp, cache, batch)
+        j = calls["n"] % (SPEC_K + 1)
+        calls["n"] += 1
+        if j == reject_at:
+            wrong = (jnp.argmax(logits, axis=-1) + 1) % logits.shape[-1]
+            logits = jax.nn.one_hot(wrong, logits.shape[-1])
+        return logits, cache
+
+    eng._draft_decode = adversarial
+    assert _drain(eng, prompts) == base
+    rounds = eng.stats["spec_rounds"]
+    assert rounds == -(-7 // (reject_at + 1))  # 7 decode tokens after prefill
+    assert eng.stats["spec_accepted"] == reject_at * rounds
+    assert eng.stats["spec_proposed"] == SPEC_K * rounds
+
+
+# ---------------------------------------------------------------------------
+# Lifecycle: preemption, snapshot/restore, budget fallback, validation
+# ---------------------------------------------------------------------------
+
+
+def test_spec_preemption_roundtrip():
+    """Preempting a speculating lane and resuming it later must not
+    change a single token (greedy resume re-derives the last committed
+    token from the recomputed logits)."""
+    cfg, model, params, draft, dparams = _pair("qwen3-8b")
+    prompts = _prompts(cfg, [32, 17], seed=13)
+    base = _drain(_engine(model, params), prompts, max_new=10)
+    eng = _engine(model, params, draft=draft, draft_params=dparams,
+                  spec_k=SPEC_K)
+    reqs = [eng.submit(p, max_new_tokens=10) for p in prompts]
+    for _ in range(4):
+        eng.step()
+    victim = next(r for r in reqs
+                  if r.slot is not None and r.slot not in eng.prefilling)
+    eng.preempt(victim.req_id)
+    done = sorted(eng.run(800), key=lambda r: r.req_id)
+    assert [r.generated for r in done] == base
+    assert eng.stats["preemptions"] == 1
+    assert eng.stats["resume_mismatches"] == 0
+
+
+def test_spec_snapshot_restore_mid_generation():
+    """A snapshot taken while lanes are speculating restores into a
+    fresh draft-paired engine and continues identically — the draft
+    cache leaves travel inside the ordinary paged-cache blob."""
+    cfg, model, params, draft, dparams = _pair("qwen3-8b")
+    prompts = _prompts(cfg, [32, 17], seed=15)
+
+    def build():
+        return _engine(model, params, sync=True, draft=draft,
+                       draft_params=dparams, spec_k=SPEC_K)
+
+    eng = build()
+    for p in prompts:
+        eng.submit(p, max_new_tokens=10)
+    for _ in range(2):
+        eng.step()
+    blob = eng.snapshot()
+    ref_done = sorted(eng.run(800), key=lambda r: r.req_id)
+    other = build()
+    other.restore(blob)
+    got_done = sorted(other.run(800), key=lambda r: r.req_id)
+    assert ([r.generated for r in got_done]
+            == [r.generated for r in ref_done])
+    assert other.stats["spec_rounds"] >= eng.stats["spec_rounds"] > 0
+
+
+def test_spec_budget_fallback_is_plain_decode():
+    """A step budget too small for even one lane's draft+verify window
+    falls back to plain decode — same tokens, zero spec rounds."""
+    cfg, model, params, draft, dparams = _pair("qwen3-8b")
+    prompts = _prompts(cfg, [32, 17], seed=17)
+    base = _drain(_engine(model, params), prompts)
+    tight = SchedulerConfig(token_budget=2 * SPEC_K + 1)  # window is 2k+2
+    eng = _engine(model, params, draft=draft, draft_params=dparams,
+                  spec_k=SPEC_K, scheduler=tight)
+    assert _drain(eng, prompts) == base
+    assert eng.stats["spec_rounds"] == 0
+
+
+def test_spec_engine_validation():
+    cfg, model, params, draft, dparams = _pair("qwen3-8b")
+    with pytest.raises(ValueError, match="paged cache"):
+        ServeEngine(model, params, paged=False, draft=draft,
+                    draft_params=dparams)
+    ssm = get_model(REDUCED["falcon-mamba-7b"])
+    sp = ssm.init(jax.random.key(2))
+    with pytest.raises(ValueError, match="verify|decode state"):
+        _engine(ssm, sp, draft=draft, draft_params=dparams)
+    import dataclasses
+    small_vocab = dataclasses.replace(REDUCED["smollm-360m"], vocab_size=128)
+    dv = get_model(small_vocab)
+    dvp = dv.init(jax.random.key(3))
+    with pytest.raises(ValueError, match="vocab"):
+        _engine(model, params, draft=dv, draft_params=dvp)
+    with pytest.raises(ValueError, match="spec_k"):
+        _engine(model, params, draft=draft, draft_params=dparams, spec_k=0)
+
+
+# ---------------------------------------------------------------------------
+# Decode-page COW sharing: fork fan-out + trie extension
+# ---------------------------------------------------------------------------
+
+
+def test_fork_shares_committed_pages_and_diverges():
+    cfg, model, params, _, _ = _pair("qwen3-8b")
+    prompts = _prompts(cfg, [32], seed=3)
+    eng = _engine(model, params, sync=True, n_slots=6)
+    parent = eng.submit(prompts[0], max_new_tokens=12)
+    for _ in range(4):
+        eng.step()
+    n_before = len(parent.generated)
+    kids = eng.fork(parent.req_id, 3, temperature=1.0, seeds=[1, 2, 3])
+    lanes = [parent] + kids
+    logical = sum(len(eng.slot_pages[r.slot]) for r in lanes)
+    physical = len({p for r in lanes for p in eng.slot_pages[r.slot]})
+    assert logical / physical > 1  # full committed pages shared n-ways
+    assert eng.stats["forks"] == 3
+    assert eng.stats["fork_shared_pages"] > 0
+    eng.run(800)
+    assert all(k.done for k in kids)
+    # children share the parent's committed prefix, then diverge by seed
+    assert len({tuple(k.generated) for k in kids}) > 1
+    for k in kids:
+        assert k.generated[:n_before] == parent.generated[:n_before]
+    # every shared page's refcount drained back out
+    assert eng.pool.outstanding == 0
+    assert eng.pool.available == eng.n_pages - 1
+
+
+def test_fork_rejects_impossible_requests():
+    cfg, model, params, _, _ = _pair("qwen3-8b")
+    eng = _engine(model, params, sync=True, n_slots=2)
+    parent = eng.submit(_prompts(cfg, [32], seed=3)[0], max_new_tokens=8)
+    eng.step()
+    with pytest.raises(ValueError, match="free slots"):
+        eng.fork(parent.req_id, 5)
+    queued = _engine(model, params, sync=True, n_slots=2)
+    waiting = queued.submit(_prompts(cfg, [32], seed=4)[0], max_new_tokens=8)
+    with pytest.raises(ValueError, match="active decode slot"):
+        queued.fork(waiting.req_id, 1)
+
+
+def test_decode_pages_enter_prefix_trie_at_completion():
+    """A second prompt that extends a finished transcript must share
+    past the old prompt boundary: generated pages are registered in the
+    trie at completion (only fully committed pages)."""
+    cfg, model, params, _, _ = _pair("qwen3-8b")
+    eng = _engine(model, params)
+    p0 = _prompts(cfg, [24], seed=3)[0]
+    r1 = eng.submit(p0, max_new_tokens=16)
+    eng.run(800)
+    assert r1.done
+    ext = list(p0) + list(r1.generated) + [5, 6, 7]
+    hits0 = eng.stats["prefix_hit_tokens"]
+    eng.submit(ext, max_new_tokens=4)
+    eng.run(800)
+    gained = eng.stats["prefix_hit_tokens"] - hits0
+    prompt_only_cap = (len(p0) // eng.page_size) * eng.page_size
+    assert gained > prompt_only_cap  # shared into the generated region
