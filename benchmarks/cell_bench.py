@@ -138,8 +138,13 @@ def main(rows=None) -> list[dict]:
           f"{summary['reshard_bytes_moved'] / 1e6:>9.1f} "
           f"{str(parity):>6}")
 
+    # slot-stable replay lets cell engines run full continuous batching:
+    # the scheduler's preemption must be armed, not pinned off
+    preempt_margin = cell.engine.sched.cfg.preempt_margin
+
     rows.append({
         "bench": "cell-churn", "engine": "cell",
+        "preempt_margin": preempt_margin,
         "hosts": N_HOSTS, "hosts_killed": len(killed),
         "model_parallel": MODEL_PARALLEL, "grid": list(summary["grid"]),
         "streams": N_PROMPTS,
@@ -165,6 +170,8 @@ def main(rows=None) -> list[dict]:
 
     # the claims the CI smoke step (and the PR acceptance bar) rely on
     assert parity, summary
+    assert preempt_margin is not None, "cell engines must run with " \
+        "preemption enabled (slot-stable replay removed the pin)"
     assert len(killed) >= int(np.ceil(0.25 * N_HOSTS)), killed
     assert summary["resharded"] >= 1, summary
     assert summary["downtime_steps"] >= 1, summary

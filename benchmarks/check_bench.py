@@ -73,9 +73,14 @@ def check_cell_churn(rows: list[dict]) -> str:
     assert row["downtime_steps"] >= 1, f"no downtime recorded: {row}"
     assert row["tokens_replayed"] >= 1, f"no mid-stream replay: {row}"
     assert row["forced_mismatches"] == 0, f"replay diverged: {row}"
+    # slot-stable replay removed the preempt_margin=None pin: cell
+    # engines must run with scheduler preemption armed AND stay parity
+    assert row["preempt_margin"] is not None, \
+        f"cell engines ran with preemption pinned off: {row}"
     return (f"OK: parity after {row['resharded']} re-shards, "
             f"{row['tokens_replayed']} tokens replayed "
-            f"({row['hosts_killed']}/{row['hosts']} hosts killed)")
+            f"({row['hosts_killed']}/{row['hosts']} hosts killed, "
+            f"preempt_margin {row['preempt_margin']})")
 
 
 def check_latency(rows: list[dict]) -> str:
@@ -92,10 +97,29 @@ def check_latency(rows: list[dict]) -> str:
     assert row["resume_mismatches"] == 0, \
         f"a preempted stream resumed off-token: {row}"
     assert row["pressure_served"] >= 1, f"pressure run served nobody: {row}"
+    # spill-backed preemption: at least one preemption must spill its
+    # page chain and resume via recall — with ZERO re-prefilled tokens
+    # on the recall hit (the whole point of moving pages, not recompute)
+    assert row["preempt_spills"] >= 1, f"no preemption spilled: {row}"
+    assert row["recall_resumes"] >= 1, f"no spill-backed resume: {row}"
+    assert row["recall_resume_prefill_tokens"] == 0, \
+        f"a recall-hit resume re-prefilled tokens: {row}"
+
+    # the open-loop sweep must have found (or bounded) a saturation knee
+    ol = _only(rows, "latency-openloop")
+    assert len(ol["qps"]) == len(ol["ttft_ms_p99"]) >= 2, \
+        f"degenerate open-loop sweep: {ol}"
+    assert all(p > 0 for p in ol["ttft_ms_p99"]), \
+        f"degenerate open-loop percentiles: {ol}"
+    assert ol["knee_qps"] in ol["qps"], f"knee outside the sweep: {ol}"
+    assert ol["prefill_cost_ratio"] > 0, f"bad prefill cost ratio: {ol}"
     return (f"OK: parity over {row['n_requests']} reqs, ttft p99 "
             f"{row['ttft_ms_p99']}ms, itl p99 {row['itl_ms_p99']}ms, "
-            f"{row['preemptions']} preemptions, "
-            f"{row['shed_expired'] + row['shed_overflow']} shed")
+            f"{row['preemptions']} preemptions "
+            f"({row['preempt_spills']} spilled, {row['recall_resumes']} "
+            f"recall-resumed, 0 re-prefilled), "
+            f"{row['shed_expired'] + row['shed_overflow']} shed, "
+            f"open-loop knee ~{ol['knee_qps']:.0f} qps")
 
 
 def check_spec_decode(rows: list[dict]) -> str:

@@ -24,9 +24,24 @@ continuous batching buys its tail latency with zero output drift.
 capacity, mixed priorities, tight TTFT deadlines on a slice, a bounded
 queue) exercises the SLO machinery end to end; its ``preemptions`` /
 ``shed_expired`` / ``shed_overflow`` / ``resume_mismatches`` counters
-land in the same row. The CI latency-smoke job asserts parity, sane
-percentiles, active preemption/shedding, and zero resume mismatches
-via ``benchmarks.check_bench``.
+land in the same row. The engine runs with a :class:`RemotePagePool`
+over neighbor hosts and write-behind staging on, so a preemption
+*spills* the victim's page chain and re-admission *recalls* it —
+``preempt_spills`` / ``recall_resumes`` / ``resume_fallbacks`` land in
+the row, and ``recall_resume_prefill_tokens`` must stay 0: a recall hit
+re-prefills nothing. The CI latency-smoke job asserts parity, sane
+percentiles, active preemption/shedding, at least one spill-backed
+resume, and zero resume mismatches via ``benchmarks.check_bench``.
+
+**Open-loop phase.** The closed phases drain a pre-filled queue, which
+can never show the saturation knee: arrivals stop when service slows.
+The open-loop phase offers a Poisson arrival process (modulated by
+on/off bursts) at a swept rate, independent of completions, and records
+p99 TTFT per offered QPS until the knee — the first rate whose p99
+blows past a multiple of the unloaded baseline. Its scheduler uses the
+cost-weighted prefill budget: the prefill/decode per-token cost ratio
+is *measured* under the same simulated clock and passed as
+``prefill_cost_ratio``. Emitted as a separate ``latency-openloop`` row.
 """
 
 from __future__ import annotations
@@ -61,6 +76,16 @@ P_REQS = 48 if TINY else 160
 P_SLOTS = 2
 P_MAX_QUEUE = 6
 P_ARRIVALS_PER_STEP = 1.2            # ~2.4x the 0.5 req/step drain rate
+P_PEERS = 3                          # spill neighbors for the remote pool
+
+# open-loop phase: offered load swept to the saturation knee
+O_SLOTS = 4
+O_MAX_QUEUE = 32
+O_HORIZON_MS = 1500.0 if TINY else 6000.0
+O_QPS = (20.0, 60.0, 120.0, 240.0) if TINY \
+    else (20.0, 40.0, 80.0, 160.0, 320.0)   # requests per simulated second
+O_BURST_PERIOD_MS = 400.0            # on/off modulation period
+O_KNEE_FACTOR = 3.0                  # p99 blow-up multiple vs baseline
 
 
 def _workload(cfg, seed):
@@ -169,6 +194,24 @@ def _latency_phase(rows_out, cfg, model, params):
     })
 
 
+def _spill_pool():
+    """A neighbor-host remote pool so pressure preemptions spill their
+    page chains instead of relying on free-list retention."""
+    from repro.core.cloudlet import CloudletRegistry
+    from repro.core.reliability import ReliabilityRegistry
+    from repro.serving.kvcache import RemotePagePool
+
+    reg = CloudletRegistry()
+    reg.create("serve", ARCH)
+    reg.join("serve", "h0")
+    rel = ReliabilityRegistry()
+    for i in range(1, P_PEERS + 1):
+        reg.join("serve", f"h{i}")
+        rel.add_host(f"h{i}")
+    return RemotePagePool(reg, "serve", "h0", reliability=rel,
+                          peer_capacity_pages=256)
+
+
 def _pressure_phase(rows_out, cfg, model, params):
     from repro.serving.engine import ServeEngine
     from repro.serving.scheduler import SchedulerConfig
@@ -176,6 +219,7 @@ def _pressure_phase(rows_out, cfg, model, params):
     engine = ServeEngine(
         model, params, n_slots=P_SLOTS, max_seq=MAX_SEQ, paged=True,
         page_size=PAGE_SIZE, prefill_chunk=PREFILL_CHUNK,
+        remote_pool=_spill_pool(), write_behind=True,
         scheduler=SchedulerConfig(token_budget=TOKEN_BUDGET,
                                   max_queue=P_MAX_QUEUE),
     )
@@ -212,12 +256,135 @@ def _pressure_phase(rows_out, cfg, model, params):
           f"shed_expired {s['shed_expired']}, "
           f"shed_overflow {s['shed_overflow']}, "
           f"resume_mismatches {s['resume_mismatches']}")
+    print(f"       preempt_spills {s['preempt_spills']}, "
+          f"recall_resumes {s['recall_resumes']}, "
+          f"resume_fallbacks {s['resume_fallbacks']}, "
+          f"recall re-prefill tokens {s['recall_resume_prefill_tokens']}")
     rows_out.update({
         "pressure_requests": P_REQS, "pressure_served": done,
         "preemptions": s["preemptions"],
         "shed_expired": s["shed_expired"],
         "shed_overflow": s["shed_overflow"],
         "resume_mismatches": s["resume_mismatches"],
+        "preempt_spills": s["preempt_spills"],
+        "recall_resumes": s["recall_resumes"],
+        "resume_fallbacks": s["resume_fallbacks"],
+        "recall_resume_prefill_tokens": s["recall_resume_prefill_tokens"],
+    })
+
+
+def _measure_prefill_cost_ratio(model, params, cfg):
+    """Per-token simulated cost of prefill vs decode, measured with two
+    probe runs under the bench clock (deterministic): a prefill-heavy
+    probe amortizes the fixed step cost over a whole chunk, a
+    decode-heavy probe over one token per lane."""
+    from repro.serving.engine import ServeEngine
+    from repro.serving.scheduler import SchedulerConfig
+
+    def probe(prompt_len, n_reqs, n_new):
+        eng = ServeEngine(
+            model, params, n_slots=O_SLOTS, max_seq=MAX_SEQ, paged=True,
+            page_size=PAGE_SIZE, prefill_chunk=PREFILL_CHUNK,
+            scheduler=SchedulerConfig(token_budget=TOKEN_BUDGET),
+        )
+        rng = np.random.default_rng(7)
+        for _ in range(n_reqs):
+            eng.submit(rng.integers(1, cfg.vocab_size, prompt_len).tolist(),
+                       max_new_tokens=n_new)
+        clock, tokens = 0.0, 0
+        while eng.pending():
+            eng.step()
+            clock += STEP_MS_FIXED + STEP_MS_PER_TOKEN * eng.last_step_tokens
+            tokens += eng.last_step_tokens
+        return clock, tokens
+
+    pre_ms, pre_tok = probe(prompt_len=128, n_reqs=1, n_new=1)
+    dec_ms, dec_tok = probe(prompt_len=8, n_reqs=O_SLOTS, n_new=32)
+    ratio = (pre_ms / pre_tok) / (dec_ms / dec_tok)
+    return round(min(max(ratio, 0.1), 10.0), 3)
+
+
+def _openloop_arrivals(rng, qps, horizon_ms):
+    """Poisson arrivals at ``qps`` req/s modulated by on/off bursts:
+    1.5x the base rate during the ON half-period, 0.5x during OFF (same
+    mean). Thinning of a homogeneous process at the peak rate."""
+    peak = 1.5 * qps / 1000.0                # arrivals per simulated ms
+    times, t = [], 0.0
+    while True:
+        t += rng.exponential(1.0 / peak)
+        if t >= horizon_ms:
+            return times
+        on = (t % O_BURST_PERIOD_MS) < O_BURST_PERIOD_MS / 2
+        if rng.random() < (1.0 if on else (0.5 / 1.5)):
+            times.append(t)
+
+
+def _openloop_phase(rows, cfg, model, params, ratio):
+    from repro.serving.engine import ServeEngine
+    from repro.serving.scheduler import SchedulerConfig
+
+    print(f"\nopen-loop phase: Poisson+burst arrivals, {O_HORIZON_MS:.0f}ms "
+          f"horizon, prefill_cost_ratio {ratio}")
+    print(f"{'qps':>6} {'offered':>8} {'served':>7} {'shed':>5} "
+          f"{'ttft p50':>9} {'ttft p99':>9}")
+    qps_list, p50s, p99s, served_l, shed_l = [], [], [], [], []
+    knee = None
+    for qps in O_QPS:
+        engine = ServeEngine(
+            model, params, n_slots=O_SLOTS, max_seq=MAX_SEQ, paged=True,
+            page_size=PAGE_SIZE, prefill_chunk=PREFILL_CHUNK,
+            scheduler=SchedulerConfig(token_budget=TOKEN_BUDGET,
+                                      max_queue=O_MAX_QUEUE,
+                                      prefill_cost_ratio=ratio),
+        )
+        rng = np.random.default_rng(83)
+        arrivals = _openloop_arrivals(rng, qps, O_HORIZON_MS)
+        specs = [(t, rng.integers(1, cfg.vocab_size,
+                                  int(rng.integers(8, 40))).tolist(),
+                  int(rng.integers(4, 16))) for t in arrivals]
+        clock, i, steps = 0.0, 0, 0
+        reqs, ttft, seen = [], {}, {}
+        while (i < len(specs) or engine.pending()) and steps < 200_000:
+            while i < len(specs) and specs[i][0] <= clock:
+                _, prompt, nnew = specs[i]
+                r = engine.submit(prompt, max_new_tokens=nnew)
+                reqs.append(r)
+                seen[r.req_id] = (len(reqs) - 1, clock)
+                i += 1
+            engine.step()
+            clock += STEP_MS_FIXED + STEP_MS_PER_TOKEN * engine.last_step_tokens
+            for r in reqs:
+                if r.req_id not in ttft and r.generated:
+                    ttft[r.req_id] = clock - seen[r.req_id][1]
+            steps += 1
+        assert not engine.pending(), f"open-loop stalled after {steps} steps"
+        done = sum(r.done for r in reqs)
+        shed = sum(r.shed for r in reqs)
+        samples = list(ttft.values())
+        p50 = _pct(samples, 50) if samples else 0.0
+        p99 = _pct(samples, 99) if samples else 0.0
+        print(f"{qps:>6.0f} {len(specs):>8} {done:>7} {shed:>5} "
+              f"{p50:>9.1f} {p99:>9.1f}")
+        qps_list.append(qps)
+        p50s.append(round(p50, 2))
+        p99s.append(round(p99, 2))
+        served_l.append(done)
+        shed_l.append(shed)
+        if knee is None and p99 > O_KNEE_FACTOR * max(p99s[0], 1e-9) \
+                and len(p99s) > 1:
+            knee = qps
+    if knee is None:
+        knee = qps_list[-1]      # never blew up inside the sweep
+    print(f"       saturation knee at ~{knee:.0f} qps "
+          f"(p99 blow-up factor {O_KNEE_FACTOR})")
+    rows.append({
+        "bench": "latency-openloop", "engine": "continuous",
+        "slots": O_SLOTS, "token_budget": TOKEN_BUDGET,
+        "horizon_ms": O_HORIZON_MS,
+        "prefill_cost_ratio": ratio,
+        "qps": qps_list, "ttft_ms_p50": p50s, "ttft_ms_p99": p99s,
+        "served": served_l, "shed": shed_l,
+        "knee_qps": knee,
     })
 
 
@@ -236,7 +403,9 @@ def main(rows=None) -> list[dict]:
     _latency_phase(row, cfg, model, params)
     _pressure_phase(row, cfg, model, params)
     rows.append(row)
-    write_json([row])
+    ratio = _measure_prefill_cost_ratio(model, params, cfg)
+    _openloop_phase(rows, cfg, model, params, ratio)
+    write_json(rows)
     return rows
 
 

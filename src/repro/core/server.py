@@ -103,6 +103,7 @@ class AdHocServer:
         max_snapshot_receivers: int = 16,
         max_job_attempts: int = 25,
         continuity_enabled: bool = True,
+        job_preempt_margin: int | None = None,
     ):
         self.reliability = ReliabilityRegistry()
         self.availability = AvailabilityChecker(failure_timeout)
@@ -125,6 +126,11 @@ class AdHocServer:
         self._job_counter = itertools.count()
         self._guest_counter = itertools.count()
         self.max_job_attempts = max_job_attempts
+        # job-granularity preemption (the serving scheduler's
+        # preempt_margin at cloud-job scale): a queued job outranking the
+        # lowest-priority running job by >= margin may evict it when no
+        # ready host exists. None (default) disables it.
+        self.job_preempt_margin = job_preempt_margin
         # continuity_enabled=False degrades to the BOINC baseline the paper
         # compares against: failures restart the job from scratch.
         self.continuity_enabled = continuity_enabled
@@ -232,12 +238,61 @@ class AdHocServer:
         )
         for job in queued:
             ready = self._ready_hosts(job.cloudlet)
+            if not ready and self.job_preempt_margin is not None:
+                victim = self._pick_job_victim(job)
+                if victim is not None:
+                    self._preempt_job(victim, now)
+                    ready = self._ready_hosts(job.cloudlet)
             if not ready:
                 continue
             best = self.reliability.ranked(ready)[0]
             self._assign(job, best, now)
             out.append((job.job_id, best))
         return out
+
+    def _pick_job_victim(self, candidate: CloudJob) -> CloudJob | None:
+        """Spill-cost-aware victim selection, mirroring the serving
+        scheduler's :meth:`~repro.serving.scheduler.Scheduler.pick_victim`:
+        base priorities gate the preemption, and within the losing tier
+        a job whose snapshot is already placed on peers (§III-D — the
+        job-level analogue of write-behind staged pages) is evicted
+        first, because its resume is a restore rather than a restart."""
+        running = [
+            j for j in self.jobs.values()
+            if j.state == JobState.RUNNING
+            and j.cloudlet == candidate.cloudlet
+            and j.assigned_host is not None
+            and self.availability.is_available(j.assigned_host)
+        ]
+        if not running:
+            return None
+        staged = (lambda j: 0 if (self.continuity_enabled
+                                  and self.snapshots.locations(j.job_id))
+                  else 1)
+        running.sort(key=lambda j: (j.priority, staged(j), j.job_id))
+        v = running[0]
+        assert self.job_preempt_margin is not None
+        if candidate.priority >= v.priority + self.job_preempt_margin:
+            return v
+        return None
+
+    def _preempt_job(self, victim: CloudJob, now: float) -> None:
+        """Vacate the victim's host and requeue it; the next assignment
+        restores from its placed snapshot if one survives (the preempt →
+        spill → recall path at job granularity)."""
+        host = victim.assigned_host
+        info = self.hosts.get(host) if host is not None else None
+        if info is not None and info.guest_id == victim.guest_id:
+            self._push_cmd(host, Command(
+                "stop_guest",
+                dict(job_id=victim.job_id, guest_id=victim.guest_id)))
+            info.guest_id = None
+        victim.state = JobState.QUEUED
+        victim.assigned_host = None
+        victim.guest_id = None
+        self._emit(now, "job_preempted", job=victim.job_id, host=host,
+                   snapshot_staged=bool(
+                       self.snapshots.locations(victim.job_id)))
 
     def _assign(self, job: CloudJob, host_id: str, now: float) -> None:
         guest_id = f"guest{next(self._guest_counter):04d}"

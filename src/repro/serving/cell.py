@@ -33,7 +33,11 @@ snapshot if a receiver survives (else restart the streams), shed the
 lowest-priority slots when the survivor mesh can't hold the full batch
 (reported ``shed``, never silently dropped), and **replay** each stream
 up to its committed frontier by teacher-forcing the committed tokens
-through real decode steps (:meth:`ServeEngine.step` ``force_tokens``).
+through real decode steps (:meth:`ServeEngine.step` ``force_tokens``,
+keyed by engine ``req_id`` so replay is *slot-stable*: scheduler
+preemption may reassign slots mid-replay without detaching a stream
+from its committed history — cell engines therefore run the full
+continuous-batching scheduler, preemption included).
 Replay makes mid-stream resume exact *by construction*: a token the
 client has seen is never re-sampled, so a host loss can reorder the
 arithmetic underneath the stream without ever rewriting it. Re-shard
@@ -76,7 +80,6 @@ from repro.core.simulation import SimClock
 from repro.parallel.partition import activation_sharding, tree_partition_specs
 from repro.serving.batch import EngineFactory, make_engine_factory
 from repro.serving.engine import ServeEngine
-from repro.serving.scheduler import SchedulerConfig
 from repro.serving.kvcache import paged_cache_shardings
 
 Pytree = Any
@@ -167,12 +170,10 @@ class ElasticServeCell:
         # a caller-supplied factory lets many cells (or a cell and its
         # parity reference) share one set of jitted kernels
         self._engine_kwargs = dict(engine_kwargs or {})
-        # the cell owns its capacity policy (active_cap + priority-ordered
-        # cancel on re-shard); engine-level preemption underneath the
-        # teacher-forced replay would only reshuffle slots mid-replay, so
-        # cell engines keep continuous batching but disable preemption
-        self._engine_kwargs.setdefault(
-            "scheduler", SchedulerConfig(preempt_margin=None))
+        # replay binds by req_id (slot-stable), so engine-level
+        # preemption may reshuffle slots mid-replay without detaching a
+        # stream from its committed frontier: cell engines run the full
+        # continuous-batching scheduler, preemption included
         self.factory: EngineFactory = factory or make_engine_factory(
             model, params, **self._engine_kwargs)
         self.engine: ServeEngine | None = None
@@ -651,7 +652,10 @@ class ElasticServeCell:
         return replayed
 
     def _force_map(self) -> dict[int, int] | None:
-        """slot -> committed token for every lane behind its frontier."""
+        """Engine req_id -> committed token for every lane behind its
+        frontier. Keyed by request, not slot, so a preemption that
+        reshuffles slot assignment mid-replay cannot detach a stream
+        from its committed history (slot-stable replay)."""
         eng = self.engine
         force: dict[int, int] = {}
         for cr in self.requests.values():
@@ -662,7 +666,7 @@ class ElasticServeCell:
                 continue
             k = len(er.generated)
             if k < len(cr.committed):
-                force[er.slot] = cr.committed[k]
+                force[er.req_id] = cr.committed[k]
         return force or None
 
     def _fixup_first_tokens(self) -> None:

@@ -174,6 +174,11 @@ class Request:
     # preemption: committed tokens (all but the last) re-prefilled after the
     # prompt on re-admission, so a preempted stream resumes token-exactly
     resume: list[int] = field(default_factory=list)
+    # spill-backed preemption: cache positions held by the slot-spill
+    # group lease-tracked under this request's id in the RemotePagePool
+    # (0 = no spilled chain; ``resume`` stays set as the recall-miss
+    # fallback while a chain is out)
+    spill_len: int = 0
     shed: bool = False     # dropped by the scheduler, not completed
     # sampling: temperature 0 is greedy (the deterministic default);
     # temperature > 0 draws per-position Gumbel noise from ``seed`` so a
@@ -245,6 +250,78 @@ def _install_page(cache: Pytree, dst: jax.Array, vals: Pytree) -> Pytree:
     }
 
 
+class SlotLifecycle:
+    """The slot-binding state machine every admission flavor shares.
+
+    Three paths end in an active decode lane, and all must agree on the
+    slot invariants (page-table row mirrors the chain, ``lengths`` counts
+    the cache-resident positions, ``last_token`` is the last committed
+    token):
+
+    - **fresh prefill**: chunked prefill computes the prompt; the final
+      chunk's argmax becomes the first committed token
+      (:meth:`activate`);
+    - **resume re-prefill**: a preempted request recomputes prompt +
+      ``resume`` tokens and :meth:`activate` re-derives (and verifies)
+      the final committed token instead of emitting a new one;
+    - **recall resume**: the victim's spilled chain is recalled and
+      installed verbatim — :meth:`resume_recalled` rebinds the slot with
+      *zero* recomputed tokens, and the next decode step continues from
+      the last committed token as if the preemption never happened.
+    """
+
+    def __init__(self, engine: "ServeEngine"):
+        self.eng = engine
+
+    def bind(self, slot: int, req: Request, chain: list[int]) -> None:
+        """Install ``chain`` as the slot's page-table row and bind the
+        request to the lane (paged engines only)."""
+        eng = self.eng
+        eng.slot_pages[slot] = list(chain)
+        eng.page_table[slot, :] = 0
+        eng.page_table[slot, : len(chain)] = chain
+        eng.slot_req[slot] = req.req_id
+        req.slot = slot
+
+    def activate(self, slot: int, req: Request, first: int,
+                 length: int) -> None:
+        """Prefill finished at ``length`` positions producing logits whose
+        argmax is ``first``: commit the first token — or, for a request
+        resuming from a preemption, verify that the recomputed token
+        re-derives the already-committed one (greedy decode is
+        deterministic; a mismatch means the cache was rebuilt wrong)."""
+        eng = self.eng
+        resumed = bool(req.generated)
+        if resumed:
+            committed = req.generated[len(req.resume)]
+            if first != committed:
+                eng.stats["resume_mismatches"] += 1
+            first = committed
+            req.resume = []
+            req.key_cache.pop("admit_keys", None)
+        else:
+            req.generated.append(first)
+        req.slot = slot
+        eng.slot_req[slot] = req.req_id
+        eng.lengths[slot] = length
+        eng.last_token[slot] = first
+        if not resumed and req.eos_id is not None and first == req.eos_id:
+            req.done = True
+            req.slot = None
+            eng._release_slot(slot)
+
+    def resume_recalled(self, slot: int, req: Request, length: int) -> None:
+        """Recall hit: the slot's cache already holds every committed
+        position (installed verbatim from the spilled chain), so the
+        stream picks up at its last committed token — no re-prefill, no
+        re-derivation, nothing to verify."""
+        eng = self.eng
+        req.resume = []
+        req.key_cache.pop("admit_keys", None)
+        eng.lengths[slot] = length
+        eng.last_token[slot] = req.generated[-1]
+
+
 @dataclass
 class _PrefillTask:
     """One admission's chunked prefill, in flight across engine steps
@@ -282,6 +359,7 @@ class ServeEngine:
         prefix_share: bool | None = None,
         remote_pool: RemotePagePool | None = None,
         recall_budget: int = 8,
+        write_behind: bool = False,
         decode_step_s: float = 5e-3,
         active_cap: int | None = None,
         scheduler: SchedulerConfig | None = None,
@@ -356,6 +434,9 @@ class ServeEngine:
         self.lengths = np.zeros((n_slots,), np.int32)
         self.last_token = np.zeros((n_slots,), np.int32)
         self.slot_req: list[int | None] = [None] * n_slots
+        # the shared bind/activate tail of every admission flavor (fresh
+        # prefill, resume re-prefill, recall resume)
+        self.lifecycle = SlotLifecycle(self)
         self.queue: list[Request] = []
         self.requests: dict[int, Request] = {}
         self._req_counter = 0
@@ -388,6 +469,16 @@ class ServeEngine:
             "shed_expired": 0,            # waiting requests past deadline
             "shed_overflow": 0,           # waiting requests over max_queue
             "resume_mismatches": 0,       # resumed recompute != committed
+            # spill-backed preemption (one slot lifecycle: a preemption
+            # is a page movement, not a recompute)
+            "preempt_spills": 0,          # preemptions whose chain spilled
+            "recall_resumes": 0,          # re-admissions served by recall
+            "resume_fallbacks": 0,        # spilled chains lost → re-prefill
+            # tokens recomputed while resuming via recall: zero by
+            # construction (a hit restores the whole chain verbatim),
+            # counter-asserted so a silent regression to recompute fails
+            "recall_resume_prefill_tokens": 0,
+            "pages_staged": 0,            # write-behind staged full pages
             # speculative decoding (zero without a draft model)
             "spec_rounds": 0,             # lane-rounds of draft+verify
             "spec_proposed": 0,           # draft tokens proposed
@@ -441,6 +532,11 @@ class ServeEngine:
             self.recall_budget = recall_budget
             self.decode_step_s = decode_step_s
             self.spill = remote_pool is not None and self.prefix_share
+            # write-behind staging: lend each decode page to a peer the
+            # moment it fills, so a later preemption ships only the
+            # unstaged remainder (cross regions have their own spill path)
+            self.write_behind = bool(write_behind) and self.spill \
+                and not self.cross
             self.spilled: dict[int, SpilledPage] = {}
             self._spill_next = self.n_pages  # stub ids, never page-table ids
             self.slot_hold = np.zeros((n_slots,), np.int32)
@@ -521,6 +617,7 @@ class ServeEngine:
                 raise ValueError(
                     "the spill tier needs the paged cache; use paged=True"
                 )
+            self.write_behind = False
             self.cache = init_cache(model, n_slots, max_seq, cache_dtype)
             self._prefill = jax.jit(model.prefill)
             self._decode = jax.jit(model.decode_step)
@@ -689,6 +786,11 @@ class ServeEngine:
         if req.slot is not None:
             self._release_slot(req.slot)
             req.slot = None
+        if self.paged and self.remote_pool is not None:
+            # drop the slot-spill group (preempted chain or write-behind
+            # staged pages) — nobody will ever recall it
+            self.remote_pool.release_slot(req_id)
+            req.spill_len = 0
         return req
 
     def reset_stats(self) -> None:
@@ -700,14 +802,17 @@ class ServeEngine:
         """Admit waiting requests, then advance every active slot by one
         token. Returns the number of active slots that generated.
 
-        ``force_tokens`` maps slot -> token id to **teacher-force** this
+        ``force_tokens`` maps req_id -> token id to **teacher-force** this
         step: the slot's K/V is still written from its real last token
         and the model's argmax is still computed (and compared — a
         difference counts as a ``forced_mismatch``), but the *committed*
         token is the forced one. The elastic cell uses this to replay a
         resumed stream token-for-token: whatever the restored engine
         would now sample, the tokens already streamed to the client are
-        what the cache is rebuilt from.
+        what the cache is rebuilt from. Forcing is keyed by request id,
+        not slot index, so replay is **slot-stable**: a preemption (or
+        any re-admission) that moves a stream to a different lane
+        mid-replay keeps receiving its own committed tokens.
 
         Slots whose admission recalled spilled pages are **recall-held**
         for the simulated transfer time (``slot_hold`` decode steps): the
@@ -811,8 +916,8 @@ class ServeEngine:
                 tok = self._choose(rows[i], req, int(self.lengths[i]))
             else:
                 tok = int(next_tokens[i])
-            if force_tokens is not None and i in force_tokens:
-                forced = int(force_tokens[i])
+            if force_tokens is not None and req.req_id in force_tokens:
+                forced = int(force_tokens[req.req_id])
                 self.stats["forced_tokens"] += 1
                 if forced != tok:
                     self.stats["forced_mismatches"] += 1
@@ -885,6 +990,17 @@ class ServeEngine:
         ):
             self._finish_request(i, req)
             return True
+        if self.write_behind and self.lengths[i] % self.page_size == 0:
+            # a chain page just filled; full pages are immutable (every
+            # position below ``lengths`` is committed, and speculative
+            # writes only land at positions >= ``lengths``), so its bytes
+            # can pre-stage on a peer now — a later preemption then ships
+            # only the unstaged remainder. Fail-soft on peer pressure.
+            idx = int(self.lengths[i]) // self.page_size - 1
+            page = self.slot_pages[i][idx]
+            if self.remote_pool.stage_page(
+                    req.req_id, idx, extract_page_payload(self.cache, page)):
+                self.stats["pages_staged"] += 1
         return False
 
     def _finish_request(self, i: int, req: Request) -> None:
@@ -902,6 +1018,10 @@ class ServeEngine:
                 self._key_tokens(req) + self._gen_keys(req, gen),
                 self.slot_pages[i],
             )
+        if self.paged and self.remote_pool is not None:
+            # write-behind staged pages die with the request; a spilled
+            # chain cannot exist here (the request was actively decoding)
+            self.remote_pool.release_slot(req.req_id)
         req.done = True
         req.slot = None
         self._release_slot(i)
@@ -1054,6 +1174,17 @@ class ServeEngine:
             self.last_token[c] = self.last_token[slot]
             self.slot_req[c] = child.req_id
             child.slot = c
+            # carry the parent's write-behind coverage: pages it already
+            # pre-staged are immutable and shared with the child, so the
+            # child's spill group pre-stages them too (own leases — a
+            # lease has a single borrower) and a later child preemption
+            # ships only the pages past the fork point
+            if self.write_behind and self.remote_pool is not None:
+                for idx in self.remote_pool.staged_pages(req.req_id):
+                    if idx < full and self.remote_pool.stage_page(
+                            child.req_id, idx,
+                            extract_page_payload(self.cache, cchain[idx])):
+                        self.stats["pages_staged"] += 1
             self.stats["forks"] += 1
             self.stats["fork_shared_pages"] += full
             children.append(child)
@@ -1120,8 +1251,8 @@ class ServeEngine:
                 if self._await_inflight_prefix(req):
                     deferred = True
                     continue
-                if self._try_admit_paged(free[0], req,
-                                         require_shared=blocked is not None):
+                if self._try_admit(free[0], req,
+                                   require_shared=blocked is not None):
                     self.queue.remove(req)
                     free.pop(0)
                     admitted = True
@@ -1184,18 +1315,29 @@ class ServeEngine:
 
     def preempt(self, req_id: int) -> Request:
         """Preempt an active decode slot back to the waiting queue,
-        token-exactly.
+        token-exactly — as a **page movement**, not a recompute, when a
+        spill tier is attached.
 
-        The committed stream is split: ``generated[:-1]`` becomes the
-        request's ``resume`` suffix (re-prefilled after the prompt on
-        re-admission) and the final committed token is re-derived from
-        the recomputed logits — greedy decode is deterministic, so the
-        stream never changes across a preemption. Before the slot is
-        released its pages are registered in the prefix trie under the
-        full prompt+generated key sequence: the free list's content
-        retention (and any sharers' refcounts) keeps them resident until
-        re-admission revives them or pool pressure evicts/spills them, so
-        resuming usually costs one COW recompute, not a full prefill."""
+        With a :class:`~repro.serving.kvcache.RemotePagePool`, the slot's
+        whole used page chain (prompt + generated tokens, including the
+        partially filled last page) is lease-tracked on neighbor hosts as
+        a slot-spill group keyed by the request id; pages already
+        write-behind staged ship for free. Re-admission recalls the chain
+        verbatim and resumes with zero recomputed tokens
+        (:meth:`SlotLifecycle.resume_recalled`).
+
+        The re-prefill fallback stays armed either way: ``generated[:-1]``
+        becomes the request's ``resume`` suffix (re-prefilled after the
+        prompt when the spill failed, the chain exceeds the recall
+        budget, or a holder churns away) and the final committed token is
+        re-derived from the recomputed logits — greedy decode is
+        deterministic, so the stream never changes across a preemption.
+        Before the slot is released its pages are registered in the
+        prefix trie under the full prompt+generated key sequence: the
+        free list's content retention (and any sharers' refcounts) keeps
+        them resident until re-admission revives them or pool pressure
+        evicts/spills them, so even the fallback usually costs one COW
+        recompute, not a full prefill."""
         req = self.requests[req_id]
         slot = req.slot
         assert self.paged, "preemption needs the paged cache"
@@ -1209,6 +1351,21 @@ class ServeEngine:
                 self._key_tokens(req) + self._gen_keys(req, gen),
                 self.slot_pages[slot],
             )
+        if self.spill and not self.cross:
+            # whole-chain spill: only the pages holding real positions
+            # travel (the chain's tail pages past ``lengths`` are
+            # garbage); staged indices are skipped — already on a peer
+            length = int(self.lengths[slot])
+            chain = self.slot_pages[slot]
+            staged = self.remote_pool.staged_pages(req.req_id)
+            payloads = {
+                idx: extract_page_payload(self.cache, chain[idx])
+                for idx in range(pages_needed(length, self.page_size))
+                if idx not in staged
+            }
+            if self.remote_pool.spill_slot(req.req_id, payloads):
+                req.spill_len = length
+                self.stats["preempt_spills"] += 1
         req.resume = list(req.generated[:-1])
         req.key_cache.pop("admit_keys", None)
         # aging restarts from the preemption: a victim that kept its
@@ -1227,7 +1384,9 @@ class ServeEngine:
         docstring) the weakest active decode slot by ``preempt_margin``,
         preempt that slot; the freed lane and pages admit the candidate
         on the next step's scan. One victim per step — pressure relief is
-        gradual, not a stampede."""
+        gradual, not a stampede. Victim choice is spill-cost-aware:
+        among equal-priority victims the one whose chain is cheapest to
+        move (most pages already write-behind staged) goes first."""
         if self.sched.cfg.preempt_margin is None or not self.queue:
             return
         cand = min(self.queue,
@@ -1237,9 +1396,91 @@ class ServeEngine:
             if r is not None and i not in self.prefilling
             and not self.slot_hold[i]
         ]
-        victim = self.sched.pick_victim(cand, active)
+        victim = self.sched.pick_victim(cand, active,
+                                        spill_cost=self._spill_cost)
         if victim is not None:
             self.preempt(victim.req_id)
+
+    def _spill_cost(self, req: Request) -> int:
+        """Pages a preemption of ``req`` would still have to transfer:
+        its used chain minus the pages already write-behind staged. Zero
+        when the spill tier is off — every victim is equally cheap (the
+        fallback re-prefill cost is priced by the scheduler's base
+        ordering, not here)."""
+        if not self.spill or self.cross or req.slot is None:
+            return 0
+        n_chain = pages_needed(int(self.lengths[req.slot]), self.page_size)
+        staged = sum(1 for idx in self.remote_pool.staged_pages(req.req_id)
+                     if idx < n_chain)
+        return n_chain - staged
+
+    def _try_admit(self, slot: int, req: Request, *,
+                   require_shared: bool = False) -> bool:
+        """One admission attempt, recall-first: a request whose preempted
+        chain is spilled tries to recall it whole (zero recompute);
+        everything else — and every fallback — goes through the prefix-
+        aware re-prefill plan. Under bypass (``require_shared``) a
+        spilled candidate just waits: recalling restores its full page
+        need, so it can never shrink past a blocked head."""
+        if req.spill_len and not require_shared:
+            got = self._try_admit_recall(slot, req)
+            if got is not None:
+                return got
+            # chain lost (holder churn / over budget): the resume
+            # fallback re-prefills through the ordinary path below
+        elif req.spill_len:
+            return False
+        return self._try_admit_paged(slot, req, require_shared=require_shared)
+
+    def _try_admit_recall(self, slot: int, req: Request) -> bool | None:
+        """Admit a preempted request by recalling its spilled slot chain.
+
+        Returns True when the slot resumed from the recalled pages, False
+        (no side effects) when the pool cannot host the chain yet — the
+        request keeps waiting with its group intact — or None when the
+        chain is unrecoverable (recall miss on a churned holder, or a
+        chain longer than ``recall_budget``): the group is dropped, the
+        ``resume_fallbacks`` counter bumped, and the caller falls back to
+        re-prefill in the same scan."""
+        P = self.page_size
+        if pages_needed(req.spill_len, P) > self.recall_budget:
+            self.remote_pool.release_slot(req.req_id)
+            req.spill_len = 0
+            self.stats["resume_fallbacks"] += 1
+            return None
+        need = pages_needed(
+            min(self._total_len(req) + req.max_new_tokens, self.max_seq), P
+        )
+        if need > self.pool.available:
+            return False
+        payloads, wait_s = self.remote_pool.recall_slot(req.req_id)
+        length, req.spill_len = req.spill_len, 0
+        if payloads is None:
+            self.stats["recall_misses"] += 1
+            self.stats["resume_fallbacks"] += 1
+            return None
+        chain = self.pool.alloc(need)
+        assert chain is not None  # guaranteed by the pre-check
+        self._retire_cached(chain)
+        like = page_payload_like(self.cache, self._region_keys(cross=False))
+        for idx, blob in payloads.items():
+            vals = deserialize_tree(blob, like)
+            self.cache = self._install_page(
+                self.cache, jnp.asarray(chain[idx], jnp.int32),
+                {k: jnp.asarray(v) for k, v in vals.items()},
+            )
+        self.stats["pages_recalled"] += len(payloads)
+        self.lifecycle.bind(slot, req, chain)
+        self.lifecycle.resume_recalled(slot, req, length)
+        self.stats["recall_resumes"] += 1
+        self.stats["peak_pages"] = max(self.stats["peak_pages"],
+                                       self.pool.outstanding)
+        hold = (int(np.ceil(wait_s / self.decode_step_s))
+                if wait_s > 0 else 0)
+        if hold:
+            self.slot_hold[slot] = hold
+            self.stats["recall_hold_steps"] += hold
+        return True
 
     def _try_admit_paged(self, slot: int, req: Request, *,
                          require_shared: bool = False) -> bool:
@@ -1526,30 +1767,11 @@ class ServeEngine:
 
     def _finish_admit(self, slot: int, req: Request, first: int,
                       length: int) -> None:
-        # a request with committed tokens is resuming from a preemption:
-        # positions [0, length) re-prefilled the prompt + all committed
-        # tokens but the last, and greedy decode is deterministic, so the
-        # recomputed argmax re-derives that last committed token — verify
-        # it (a mismatch would mean the cache was rebuilt wrong), never
-        # re-emit it
-        resumed = bool(req.generated)
-        if resumed:
-            committed = req.generated[len(req.resume)]
-            if first != committed:
-                self.stats["resume_mismatches"] += 1
-            first = committed
-            req.resume = []
-            req.key_cache.pop("admit_keys", None)
-        else:
-            req.generated.append(first)
-        req.slot = slot
-        self.slot_req[slot] = req.req_id
-        self.lengths[slot] = length
-        self.last_token[slot] = first
-        if not resumed and req.eos_id is not None and first == req.eos_id:
-            req.done = True
-            req.slot = None
-            self._release_slot(slot)
+        # fresh admissions commit their first token; a request with
+        # committed tokens is resuming from a preemption via re-prefill
+        # and the recomputed argmax is verified against (never replaces)
+        # the committed stream — see SlotLifecycle.activate
+        self.lifecycle.activate(slot, req, first, length)
 
     def _prefill_paged(self, slot: int, req: Request, shared: list[int],
                        private: list[int], matched: int,
@@ -1773,8 +1995,7 @@ class ServeEngine:
         register the prompt pages in the trie (only now — their content
         exists, so a concurrent admission can never share half-written
         pages), and commit the first token."""
-        self.page_table[slot, :] = 0
-        self.page_table[slot, : len(chain)] = chain
+        self.lifecycle.bind(slot, req, chain)
         if self.prefix_share:
             self._register_prefix(key_tokens, chain)
         # locally resident content = live pages + free-but-cached prefix
@@ -1875,6 +2096,7 @@ class ServeEngine:
                     "deadline_ms": r.deadline_ms,
                     "arrival_step": r.arrival_step,
                     "resume": r.resume,
+                    "spill_len": r.spill_len,
                     "temperature": r.temperature,
                     "seed": r.seed,
                 }
@@ -1907,6 +2129,20 @@ class ServeEngine:
                 str(sid): [sp.lease_id, sp.peer]
                 for sid, sp in self.spilled.items()
             }
+            # slot-spill groups (preempted chains + write-behind staged
+            # pages of live slots): like prefix stubs, only lease ids +
+            # peers travel; a restore re-adopts each group after
+            # revalidating every lease against live membership
+            if self.remote_pool is not None:
+                meta["slot_spills"] = {
+                    str(r.req_id): {
+                        str(i): [lid, peer]
+                        for i, (lid, peer)
+                        in self.remote_pool.slot_leases(r.req_id).items()
+                    }
+                    for r in self.requests.values()
+                    if self.remote_pool.slot_leases(r.req_id)
+                }
             meta["slot_hold"] = [int(h) for h in self.slot_hold]
         meta["stats"] = {k: int(v) for k, v in self.stats.items()}
         mb = json.dumps(meta).encode()
@@ -2018,6 +2254,7 @@ class ServeEngine:
             req.deadline_ms = kv.get("deadline_ms")
             req.arrival_step = int(kv.get("arrival_step", 0))
             req.resume = list(kv.get("resume", []))
+            req.spill_len = int(kv.get("spill_len", 0))
             req.temperature = float(kv.get("temperature", 0.0))
             req.seed = int(kv.get("seed", 0))
             if req.deadline_ms is not None:
@@ -2028,3 +2265,23 @@ class ServeEngine:
         self._req_counter = (
             max(self.requests) + 1 if self.requests else 0
         )
+        if self.paged:
+            # re-adopt slot-spill groups: every lease must still be valid
+            # (holder alive, payload stored) or the whole chain falls back
+            # to re-prefill — churn-safe, never a stale partial recall
+            for rid_s, leases in meta.get("slot_spills", {}).items():
+                rid = int(rid_s)
+                mapping = {int(i): int(ent[0]) for i, ent in leases.items()}
+                req = self.requests.get(rid)
+                ok = (self.remote_pool is not None
+                      and self.remote_pool.adopt_slot(rid, mapping))
+                if req is None:
+                    if ok:  # finished/cancelled while the snapshot sat
+                        self.remote_pool.release_slot(rid)
+                    continue
+                if not ok and req.spill_len:
+                    req.spill_len = 0
+                    self.stats["resume_fallbacks"] += 1
+            if self.remote_pool is None:
+                for req in self.requests.values():
+                    req.spill_len = 0

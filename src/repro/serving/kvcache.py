@@ -37,6 +37,14 @@ pressure would destroy retained prefix-cache pages, the coldest ones
 (LRU by :class:`PagePool` last-touch generation, necessarily refcount
 zero) are serialized and *lent* to a neighbor cloudlet host instead of
 evicted; a :class:`SpilledPage` stub keeps their place in the trie.
+Beyond cold prefixes, the pool also tracks **slot spill groups**: a
+preempted slot's *whole* page chain (prompt + generated tokens,
+including the partially filled last page) is lent as one keyed group
+(:meth:`RemotePagePool.spill_slot`) and later recalled all-or-nothing
+(:meth:`RemotePagePool.recall_slot`) so a preemption is a page
+movement, not a recompute. Hot decode pages may be **write-behind
+staged** (:meth:`RemotePagePool.stage_page`) as they fill, shrinking
+the preemption-time transfer to the unstaged remainder.
 
 Lease lifecycle: ``lend`` grants a
 :class:`~repro.core.cloudlet.PageLease` in the cloudlet's
@@ -587,11 +595,19 @@ class RemotePagePool:
         self.recall_rtt_s = recall_rtt_s
         self.recall_page_s = recall_page_s
         self._store: dict[int, bytes] = {}  # lease id -> lent payload
+        # slot spill groups: group key -> {chain index: lease id}. One
+        # group holds a preempted slot's whole page chain; staged pages
+        # (write-behind) join the group before the preemption happens.
+        self._slots: dict[int, dict[int, int]] = {}
         self.stats = {
             "pages_lent": 0,
             "pages_recalled": 0,
             "recall_misses": 0,
             "lend_rejects": 0,
+            "pages_staged": 0,
+            "slots_spilled": 0,
+            "slots_recalled": 0,
+            "slot_recall_misses": 0,
             "sim_lend_s": 0.0,
             "sim_recall_s": 0.0,
         }
@@ -683,6 +699,107 @@ class RemotePagePool:
         was evicted): frees the peer's capacity immediately."""
         self._store.pop(lease_id, None)
         self.registry.leases.release(lease_id)
+
+    # --------------------------------------------------- slot spill groups
+    def stage_page(self, key: int, idx: int, payload: bytes) -> bool:
+        """Write-behind: pre-stage one page of slot group ``key`` (chain
+        index ``idx``) on a peer while the slot is still decoding. Only
+        *full* pages may be staged — their contents are immutable, so the
+        staged bytes stay exact. Fail-soft: returns False (page simply
+        not staged) when no peer has capacity; a later :meth:`spill_slot`
+        ships it with the unstaged remainder."""
+        group = self._slots.setdefault(key, {})
+        if idx in group:
+            return True
+        lease = self.lend(payload)
+        if lease is None:
+            return False
+        group[idx] = lease.lease_id
+        self.stats["pages_staged"] += 1
+        return True
+
+    def staged_pages(self, key: int) -> frozenset[int]:
+        """Chain indices of group ``key`` already on a peer — what a
+        spill-cost-aware victim choice counts as pre-paid."""
+        return frozenset(self._slots.get(key, ()))
+
+    def spill_slot(self, key: int, payloads: dict[int, bytes]) -> bool:
+        """Lend a preempted slot's remaining (unstaged) chain pages as
+        group ``key``, all-or-nothing: on success every index in
+        ``payloads`` plus previously staged ones is lease-tracked for
+        :meth:`recall_slot`; on failure (a page found no peer) the whole
+        group — fresh leases *and* staged ones — is released and False
+        returned, so the caller falls back to re-prefill with no leaked
+        peer capacity."""
+        group = self._slots.setdefault(key, {})
+        fresh: list[int] = []
+        for idx, payload in payloads.items():
+            if idx in group:
+                continue  # already write-behind staged
+            lease = self.lend(payload)
+            if lease is None:
+                for lid in fresh:
+                    self.release(lid)
+                for lid in group.values():
+                    self.release(lid)
+                del self._slots[key]
+                return False
+            group[idx] = lease.lease_id
+            fresh.append(lease.lease_id)
+        self.stats["slots_spilled"] += 1
+        return True
+
+    def recall_slot(self, key: int) -> tuple[dict[int, bytes] | None, float]:
+        """All-or-nothing recall of slot group ``key``. Returns
+        ``(payloads, wait_s)`` mapping chain index -> exact lent bytes on
+        a full hit; ``(None, wait_s)`` when any page's holder churned
+        away (the partial remainder is useless — a chain with a hole
+        cannot seed a decode cache), with every surviving lease released.
+        Either way the group is gone afterwards."""
+        group = self._slots.pop(key, None)
+        if group is None:
+            return None, 0.0
+        got, wait = self.recall(list(group.values()))
+        out = {idx: got[lid] for idx, lid in group.items()}
+        if any(b is None for b in out.values()):
+            self.stats["slot_recall_misses"] += 1
+            return None, wait
+        self.stats["slots_recalled"] += 1
+        return out, wait
+
+    def release_slot(self, key: int) -> None:
+        """Drop slot group ``key`` without recalling it (the request was
+        shed/cancelled, or fell back to re-prefill): frees the peers'
+        capacity immediately. Safe on an unknown key."""
+        group = self._slots.pop(key, None)
+        for lid in (group or {}).values():
+            self.release(lid)
+
+    def slot_leases(self, key: int) -> dict[int, tuple[int, str]]:
+        """Snapshot view of group ``key``: chain index -> (lease id,
+        holder peer). Empty for an unknown key."""
+        out: dict[int, tuple[int, str]] = {}
+        for idx, lid in self._slots.get(key, {}).items():
+            lease = self.registry.leases.get(lid)
+            out[idx] = (lid, lease.holder if lease else "")
+        return out
+
+    def adopt_slot(self, key: int, leases: dict[int, int]) -> bool:
+        """Re-adopt a restored snapshot's slot group: every lease must
+        still be valid (holder in the cloudlet, payload stored) or the
+        whole group is released and False returned — a restore can only
+        trust a chain it can recall completely. Leases the live pool
+        tracks under ``key`` but the snapshot does not (staged after the
+        snapshot was cut) are released rather than leaked."""
+        existing = self._slots.pop(key, None) or {}
+        for lid in set(existing.values()) - set(leases.values()):
+            self.release(lid)
+        if any(not self.lease_valid(lid) for lid in leases.values()):
+            for lid in leases.values():
+                self.release(lid)
+            return False
+        self._slots[key] = dict(leases)
+        return True
 
     @property
     def lent(self) -> int:

@@ -47,19 +47,29 @@ keyed on base priorities, not aged ones: aging exists to order peers
 fairly, and letting it trigger preemption would make any uniform
 backlog thrash. A preempted slot's pages are registered in the prefix
 trie before release, so they stay resident (refcounted or free-but-
-cached) until re-admission revives them or pool pressure evicts them.
+cached) until re-admission revives them or pool pressure evicts them —
+and with a remote pool attached the engine additionally *spills* the
+victim's whole chain to neighbor hosts, so resume is a page recall
+rather than a re-prefill. Among equal-priority victims the engine's
+``spill_cost`` hook prefers the one whose pages are already
+write-behind staged (cheapest eviction).
 
-**Queue bounds.** With ``max_queue`` set, admission sheds the
-lowest-ranked waiting requests once the queue exceeds the bound —
-degrade, don't queue unboundedly.
+**Queue bounds with class quotas.** With ``max_queue`` set, admission
+sheds the lowest-ranked waiting requests once the queue exceeds the
+bound — degrade, don't queue unboundedly. ``class_shares`` reserves a
+fraction of the bound per base-priority class so a burst of one class
+cannot monopolize the queue and shed every other class.
 
 **Token budget.** ``token_budget`` caps the tokens processed per engine
 step: each active decode lane reserves one, and only the remainder may
 be spent on prefill chunks. Long prompts therefore prefill across
 several steps while decode lanes keep emitting every step — inter-token
-latency stays flat through prompt bursts. ``token_budget=None`` selects
-the legacy synchronous mode (whole prompt prefilled at admission), kept
-as the non-continuous reference for parity benchmarks.
+latency stays flat through prompt bursts. ``prefill_cost_ratio``
+deflates the prefill allowance when a prefill token is measured to cost
+more step time than a decode token, keeping the budget an honest proxy
+for wall-clock. ``token_budget=None`` selects the legacy synchronous
+mode (whole prompt prefilled at admission), kept as the non-continuous
+reference for parity benchmarks.
 """
 
 from __future__ import annotations
@@ -89,6 +99,17 @@ class SchedulerConfig:
     scan_limit: int = 16
     # waiting-queue bound; lowest-ranked requests beyond it are shed
     max_queue: int | None = None
+    # admission-control quotas: base-priority class -> fraction of
+    # max_queue reserved for that class, so a flood of low-priority
+    # arrivals cannot shed higher classes out of a bounded queue.
+    # Unreserved capacity stays first-come in ranked order.
+    class_shares: dict[int, float] | None = None
+    # simulated cost of one prefill token relative to one decode token;
+    # the per-step token_budget is decode-denominated, so a ratio > 1
+    # shrinks the prefill allowance (chunked prefill arithmetic is
+    # batched and cheaper per token than it is under this ratio only
+    # when measured so — benches pass their measured value)
+    prefill_cost_ratio: float = 1.0
 
     @property
     def synchronous(self) -> bool:
@@ -153,12 +174,23 @@ class Scheduler:
 
     # ------------------------------------------------------------ preemption
     def pick_victim(self, candidate: "Request",
-                    active: Iterable["Request"]) -> "Request | None":
+                    active: Iterable["Request"],
+                    *, spill_cost=None) -> "Request | None":
         """Lowest-base-priority active request the candidate may preempt,
-        or None. Base priorities only — see the module docstring."""
+        or None. Base priorities only — see the module docstring.
+
+        ``spill_cost`` (optional callable ``Request -> int``) breaks ties
+        *within* a priority tier by how much work evicting the victim
+        still costs — the engine passes the number of chain pages not yet
+        write-behind staged on a neighbor, so preemption prefers victims
+        whose pages already left the building. Priority stays the primary
+        key: a cheap spill never justifies evicting higher-priority work.
+        """
         if self.cfg.preempt_margin is None:
             return None
-        victims = sorted(active, key=lambda r: (r.priority, -r.req_id))
+        cost = spill_cost if spill_cost is not None else (lambda r: 0)
+        victims = sorted(active,
+                         key=lambda r: (r.priority, cost(r), -r.req_id))
         if not victims:
             return None
         v = victims[0]
@@ -169,11 +201,35 @@ class Scheduler:
     # -------------------------------------------------------------- shedding
     def overflow(self, queue: list["Request"], step: int) -> list["Request"]:
         """Waiting requests to shed because the queue exceeds its bound:
-        the lowest-ranked tail, never the head."""
+        the lowest-ranked tail, never the head.
+
+        With ``class_shares`` set, each base-priority class keeps its
+        reserved share of ``max_queue`` before the remainder is filled in
+        ranked order — a flood of aged low-priority arrivals can no
+        longer shed a trickle of higher-priority work out of a bounded
+        queue (admission control, not just ordering)."""
         if self.cfg.max_queue is None or len(queue) <= self.cfg.max_queue:
             return []
         ranked = self.order(queue, step)
-        return ranked[self.cfg.max_queue:]
+        cap = self.cfg.max_queue
+        if not self.cfg.class_shares:
+            return ranked[cap:]
+        reserved = {c: int(share * cap)
+                    for c, share in self.cfg.class_shares.items()}
+        free = cap - sum(reserved.values())
+        assert free >= 0, "class_shares reserve more than max_queue"
+        kept: list["Request"] = []
+        shed: list["Request"] = []
+        for r in ranked:
+            if reserved.get(r.priority, 0) > 0:
+                reserved[r.priority] -= 1
+                kept.append(r)
+            elif free > 0:
+                free -= 1
+                kept.append(r)
+            else:
+                shed.append(r)
+        return shed
 
     # ---------------------------------------------------------------- budget
     def prefill_budget(self, n_decode_lanes: int, prefilling: bool,
@@ -183,8 +239,16 @@ class Scheduler:
         window (``tokens_per_lane``) each when the engine speculates this
         step. Guarantees minimal progress (one chunk's worth is granted
         by the engine when a prefill is mid-flight and the budget is
-        exhausted) via the ``prefilling`` flag at the call site."""
+        exhausted) via the ``prefilling`` flag at the call site.
+
+        The budget is denominated in decode tokens; the leftover is
+        deflated by ``prefill_cost_ratio`` so a prefill token that costs
+        (say) 1.5 decode tokens of step time spends 1.5 budget units."""
         assert self.cfg.token_budget is not None
         del prefilling
-        return max(0, self.cfg.token_budget
+        left = max(0, self.cfg.token_budget
                    - n_decode_lanes * tokens_per_lane)
+        if self.cfg.prefill_cost_ratio != 1.0:
+            assert self.cfg.prefill_cost_ratio > 0
+            left = int(left / self.cfg.prefill_cost_ratio)
+        return left

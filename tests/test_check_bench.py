@@ -46,7 +46,8 @@ def _batch_row():
 def _cell_row():
     return {"bench": "cell-churn", "parity": True, "hosts": 4,
             "hosts_killed": 1, "resharded": 2, "downtime_steps": 3,
-            "tokens_replayed": 11, "forced_mismatches": 0}
+            "tokens_replayed": 11, "forced_mismatches": 0,
+            "preempt_margin": 2}
 
 
 def _latency_row():
@@ -56,7 +57,21 @@ def _latency_row():
             "ref_ttft_ms_p50": 118.0, "ref_ttft_ms_p99": 790.0,
             "ref_itl_ms_p50": 2.2, "ref_itl_ms_p99": 6.6,
             "preemptions": 6, "shed_expired": 5, "shed_overflow": 28,
-            "resume_mismatches": 0, "pressure_served": 15}
+            "resume_mismatches": 0, "pressure_served": 15,
+            "preempt_spills": 6, "recall_resumes": 4,
+            "recall_resume_prefill_tokens": 0}
+
+
+def _openloop_row():
+    return {"bench": "latency-openloop", "engine": "continuous",
+            "qps": [20.0, 40.0, 80.0], "ttft_ms_p50": [3.3, 3.4, 11.0],
+            "ttft_ms_p99": [4.0, 10.9, 55.2], "served": [30, 60, 118],
+            "shed": [0, 0, 2], "knee_qps": 80.0,
+            "prefill_cost_ratio": 0.2}
+
+
+def _latency_rows():
+    return [_latency_row(), _openloop_row()]
 
 
 def test_good_rows_pass():
@@ -64,7 +79,7 @@ def test_good_rows_pass():
     assert cb.check_spec_decode(_spec_rows()).startswith("OK")
     assert cb.check_batch_churn([_batch_row()]).startswith("OK")
     assert cb.check_cell_churn([_cell_row()]).startswith("OK")
-    assert cb.check_latency([_latency_row()]).startswith("OK")
+    assert cb.check_latency(_latency_rows()).startswith("OK")
 
 
 def test_serving_rejects_parity_failure_and_missing_scenarios():
@@ -127,6 +142,7 @@ def test_batch_churn_rejects_weakened_counters(field, value, msg):
     ("downtime_steps", 0, "downtime"),
     ("tokens_replayed", 0, "replay"),
     ("forced_mismatches", 1, "replay diverged"),
+    ("preempt_margin", None, "preemption pinned off"),
 ])
 def test_cell_churn_rejects_weakened_counters(field, value, msg):
     row = _cell_row()
@@ -144,22 +160,43 @@ def test_cell_churn_rejects_weakened_counters(field, value, msg):
     ("shed_overflow", 0, "overflow shed"),
     ("resume_mismatches", 1, "off-token"),
     ("pressure_served", 0, "served nobody"),
+    ("preempt_spills", 0, "no preemption spilled"),
+    ("recall_resumes", 0, "no spill-backed resume"),
+    ("recall_resume_prefill_tokens", 3, "re-prefilled"),
 ])
 def test_latency_rejects_weakened_counters(field, value, msg):
-    row = _latency_row()
-    row[field] = value
+    rows = _latency_rows()
+    rows[0][field] = value
     with pytest.raises(AssertionError, match=msg):
-        cb.check_latency([row])
+        cb.check_latency(rows)
+
+
+@pytest.mark.parametrize("field,value,msg", [
+    ("qps", [20.0], "degenerate open-loop sweep"),
+    ("ttft_ms_p99", [4.0, 0.0, 55.2], "degenerate open-loop percentiles"),
+    ("knee_qps", 999.0, "knee outside the sweep"),
+    ("prefill_cost_ratio", 0.0, "prefill cost ratio"),
+])
+def test_latency_rejects_weakened_openloop_row(field, value, msg):
+    rows = _latency_rows()
+    rows[1][field] = value
+    if field == "qps":
+        rows[1]["ttft_ms_p99"] = [4.0]
+        rows[1]["knee_qps"] = 20.0
+    with pytest.raises(AssertionError, match=msg):
+        cb.check_latency(rows)
 
 
 def test_missing_scenario_row_is_an_error():
     with pytest.raises(AssertionError, match="no 'latency' row"):
         cb.check_latency(_serving_rows())
+    with pytest.raises(AssertionError, match="no 'latency-openloop' row"):
+        cb.check_latency([_latency_row()])
 
 
 def test_cli_round_trip(tmp_path, capsys):
     path = tmp_path / "BENCH_SERVING.json"
-    path.write_text(json.dumps({"rows": [_latency_row(), _batch_row()]}))
+    path.write_text(json.dumps({"rows": _latency_rows() + [_batch_row()]}))
     cb.main(["latency", "--json", str(path)])
     assert capsys.readouterr().out.startswith("OK")
     cb.main(["batch-churn", "--json", str(path)])

@@ -274,3 +274,186 @@ def test_page_pool_guards():
     before = pool.available
     assert pool.alloc(99) is None
     assert pool.available == before
+
+
+# ---------------------------------------------------------------------------
+# Slot-spill lifecycle: PagePool + RemotePagePool lease conservation
+# ---------------------------------------------------------------------------
+
+
+_LIFECYCLE_OPS = st.lists(
+    st.tuples(
+        st.sampled_from(["admit", "fork", "stage", "preempt", "recall",
+                         "release", "leave", "adopt"]),
+        st.integers(0, 10 ** 6),
+    ),
+    max_size=40,
+)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(8, 20), st.integers(2, 12), _LIFECYCLE_OPS)
+def test_slot_spill_lifecycle_conserves_pages_and_leases(
+        n_pages, peer_cap, script):
+    """Random preempt / spill / recall / resume-fallback / fork scripts
+    against a shadow model of both pools. Invariants after every op:
+    the local pool conserves pages (``available + outstanding ==
+    n_pages - 1``), the remote pool stores exactly the leases the shadow
+    expects (no lease leaks from failed spills, misses, or releases),
+    ``recall_slot`` is all-or-nothing — the exact spilled bytes on a hit,
+    None after any holder churned — and ``spill_slot`` failure leaves no
+    group behind."""
+    from repro.core.cloudlet import CloudletRegistry
+    from repro.serving.kvcache import RemotePagePool
+
+    reg = CloudletRegistry()
+    reg.create("serve", "m")
+    reg.join("serve", "h0")
+    peers = ["p1", "p2", "p3"]
+    for p in peers:
+        reg.join("serve", p)
+    remote = RemotePagePool(reg, "serve", "h0",
+                            peer_capacity_pages=peer_cap)
+    pool = PagePool(n_pages)
+
+    def payload(key, idx):
+        return f"{key}:{idx}".encode() * (idx + 1)
+
+    chains: dict[int, list[int]] = {}     # live slots: key -> pages
+    pool_ref: dict[int, int] = {}         # local-pool refcount shadow
+    groups: dict[int, dict[int, bytes]] = {}   # spilled: key -> idx -> bytes
+    staged: dict[int, dict[int, bytes]] = {}   # write-behind of live keys
+    leases: dict[int, int] = {}           # key -> stored lease count
+    doomed: set[int] = set()              # a holder churned: recall must miss
+    departed: set[str] = set()
+    next_key = 0
+
+    def alloc_chain(n):
+        pages = pool.alloc(n)
+        if pages is not None:
+            for p in pages:
+                assert pool_ref.get(p, 0) == 0
+                pool_ref[p] = 1
+        return pages
+
+    def check():
+        assert pool.available + pool.outstanding == n_pages - 1
+        for p in range(1, n_pages):
+            assert pool.refcount(p) == pool_ref.get(p, 0), p
+        assert remote.lent == sum(leases.values())
+        for key, g in groups.items():
+            assert remote.staged_pages(key) == frozenset(g)
+        for key, g in staged.items():
+            assert remote.staged_pages(key) == frozenset(g)
+
+    for kind, r in script:
+        if kind == "admit":
+            pages = alloc_chain(1 + r % 4)
+            if pages is not None:
+                chains[next_key] = list(pages)
+                next_key += 1
+        elif kind == "fork" and chains:
+            src_key = sorted(chains)[r % len(chains)]
+            src = chains[src_key]
+            k = 1 + r % len(src)
+            pool.share(src[:k])
+            for p in src[:k]:
+                pool_ref[p] += 1
+            child = next_key
+            next_key += 1
+            chains[child] = list(src[:k])
+            # fork carries the parent's staged coverage inside the prefix
+            for idx, blob in staged.get(src_key, {}).items():
+                if idx < k and remote.stage_page(child, idx, blob):
+                    staged.setdefault(child, {})[idx] = blob
+                    leases[child] = leases.get(child, 0) + 1
+                    if any(h in departed for _, h
+                           in remote.slot_leases(child).values()):
+                        doomed.add(child)
+        elif kind == "stage" and chains:
+            key = sorted(chains)[r % len(chains)]
+            idx = r % len(chains[key])
+            blob = payload(key, idx)
+            if idx in staged.get(key, {}):
+                assert remote.stage_page(key, idx, blob)
+            elif remote.stage_page(key, idx, blob):
+                staged.setdefault(key, {})[idx] = blob
+                leases[key] = leases.get(key, 0) + 1
+        elif kind == "preempt" and chains:
+            key = sorted(chains)[r % len(chains)]
+            chain = chains.pop(key)
+            pre = staged.pop(key, {})
+            fresh = {idx: payload(key, idx)
+                     for idx in range(len(chain)) if idx not in pre}
+            if remote.spill_slot(key, fresh):
+                groups[key] = {**pre, **fresh}
+                leases[key] = len(groups[key])
+            else:
+                # all-or-nothing: staged leases released too, group gone
+                assert remote.staged_pages(key) == frozenset()
+                leases[key] = 0
+                doomed.discard(key)
+            pool.free(chain)
+            for p in chain:
+                pool_ref[p] -= 1
+                if pool_ref[p] == 0:
+                    del pool_ref[p]
+        elif kind == "recall" and groups:
+            key = sorted(groups)[r % len(groups)]
+            pages = alloc_chain(len(groups[key]))
+            if pages is None:
+                continue            # engine checks headroom before recall
+            got, _wait = remote.recall_slot(key)
+            expect = groups.pop(key)
+            leases[key] = 0
+            if key in doomed:
+                # resume fallback: re-prefill into the fresh chain
+                assert got is None, "recall hit despite a churned holder"
+                doomed.discard(key)
+            else:
+                assert got == expect
+            chains[key] = list(pages)
+        elif kind == "release" and (groups or staged):
+            pool_keys = sorted(set(groups) | set(staged))
+            key = pool_keys[r % len(pool_keys)]
+            remote.release_slot(key)
+            groups.pop(key, None)
+            staged.pop(key, None)
+            leases[key] = 0
+            doomed.discard(key)
+        elif kind == "leave":
+            alive = [p for p in peers if p not in departed]
+            if len(alive) <= 1:
+                continue            # keep one peer so spills can succeed
+            peer = alive[r % len(alive)]
+            for key in set(groups) | set(staged):
+                if any(h == peer for _, h
+                       in remote.slot_leases(key).values()):
+                    doomed.add(key)
+            reg.leave_all(peer)
+            departed.add(peer)
+        elif kind == "adopt" and groups:
+            key = sorted(groups)[r % len(groups)]
+            snap = {i: lid for i, (lid, _h)
+                    in remote.slot_leases(key).items()}
+            ok = remote.adopt_slot(key, snap)
+            if key in doomed:
+                assert not ok, "adopted a group with a churned holder"
+                groups.pop(key)
+                leases[key] = 0
+                doomed.discard(key)
+            else:
+                assert ok
+        check()
+
+    # drain: every group released, every chain freed — both pools empty
+    for key in list(groups):
+        remote.release_slot(key)
+        leases[key] = 0
+    for key, chain in chains.items():
+        remote.release_slot(key)    # drops any write-behind staging
+        leases[key] = 0
+        pool.free(chain)
+    assert remote.lent == 0
+    assert pool.outstanding == 0
+    assert pool.available == n_pages - 1

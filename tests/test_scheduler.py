@@ -121,6 +121,71 @@ def test_prefill_budget_after_decode_lanes():
     assert not SchedulerConfig().synchronous
 
 
+def test_class_shares_reserve_queue_slots_per_priority():
+    # a flood of aged priority-0 requests outranks a fresh priority-1
+    # arrival (effective prio 2 vs 1) — without shares it sheds the
+    # paying class right out of the bounded queue; the reserved share
+    # (keyed on BASE priority) must keep it admitted
+    flood = [_req(i, priority=0, arrival=0) for i in range(10)]
+    paying = [_req(100 + i, priority=1, arrival=8) for i in range(2)]
+    plain = Scheduler(SchedulerConfig(max_queue=8, aging_steps=4))
+    assert plain.overflow(flood + paying, step=8) == flood[8:] + paying
+
+    sched = Scheduler(SchedulerConfig(max_queue=8, aging_steps=4,
+                                      class_shares={1: 0.25}))
+    shed = sched.overflow(flood + paying, step=8)
+    kept = [r for r in flood + paying if r not in shed]
+    assert len(kept) == 8
+    # both prio-1 requests fit: 2 reserved slots = int(0.25 * 8)
+    assert all(p in kept for p in paying)
+    # the flood fills the remaining 6 free slots in ranked order
+    assert shed == flood[6:]
+    # under-subscribed queue: shares shed nothing
+    assert sched.overflow(paying + flood[:4], step=8) == []
+
+
+def test_class_shares_cannot_oversubscribe_queue():
+    sched = Scheduler(SchedulerConfig(max_queue=4,
+                                      class_shares={0: 0.75, 1: 0.75}))
+    with pytest.raises(AssertionError, match="reserve more"):
+        sched.overflow([_req(i) for i in range(8)], step=0)
+
+
+def test_pick_victim_prefers_cheap_spills_within_a_priority():
+    sched = Scheduler(SchedulerConfig(preempt_margin=2))
+    active = [_req(0, priority=0), _req(1, priority=0), _req(2, priority=1)]
+    # without a cost hook, youngest of the lowest base priority wins
+    assert sched.pick_victim(_req(9, priority=3), active) is active[1]
+    # the write-behind-staged victim (fewer unstaged pages to ship) wins
+    cost = {0: 1, 1: 5, 2: 0}.get
+    v = sched.pick_victim(_req(9, priority=3), active,
+                          spill_cost=lambda r: cost(r.req_id))
+    assert v is active[0]
+    # but base priority stays primary: a cheap high-priority slot never
+    # loses to an expensive low-priority one
+    assert v is not active[2]
+    # cost only breaks ties; the margin gate is unchanged
+    assert sched.pick_victim(_req(9, priority=1), active,
+                             spill_cost=lambda r: 0) is None
+
+
+def test_prefill_cost_ratio_shapes_chunk_budget():
+    # measured prefill tokens costing 2x decode tokens: the allowance in
+    # decode-token units is halved so a step stays on its latency budget
+    assert Scheduler(SchedulerConfig(
+        token_budget=64, prefill_cost_ratio=2.0)).prefill_budget(10, False) \
+        == 27
+    # cheap prefill (ratio < 1) widens the allowance
+    assert Scheduler(SchedulerConfig(
+        token_budget=64, prefill_cost_ratio=0.5)).prefill_budget(10, False) \
+        == 108
+    # the default ratio is the identity — legacy budgets are untouched
+    assert SchedulerConfig().prefill_cost_ratio == 1.0
+    with pytest.raises(AssertionError):
+        Scheduler(SchedulerConfig(
+            token_budget=64, prefill_cost_ratio=0.0)).prefill_budget(1, False)
+
+
 # ---------------------------------------------------------------------------
 # Engine integration (REDUCED qwen, paged)
 # ---------------------------------------------------------------------------

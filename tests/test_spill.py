@@ -413,3 +413,107 @@ def test_spill_requires_paged_mode(qwen):
     with pytest.raises(ValueError):
         ServeEngine(model, params, n_slots=2, max_seq=96, paged=False,
                     remote_pool=remote)
+
+
+# ---------------------------------------------------------------------------
+# Spill-backed preemption: recall resume, recall-miss fallback
+# ---------------------------------------------------------------------------
+
+
+def _preempt_scenario(cfg, model, params, remote, **kw):
+    """One slot, a low-priority victim mid-decode, a high-priority
+    preemptor: returns (engine, victim, preemptor) right after the
+    preemption spilled the victim's chain."""
+    from repro.serving.scheduler import SchedulerConfig
+
+    eng = _engine(model, params, remote, n_slots=1, n_pages=12,
+                  scheduler=SchedulerConfig(token_budget=64,
+                                            preempt_margin=2), **kw)
+    prefix = _prefixes(cfg, 1, seed=9)[0]
+    low = eng.submit(list(prefix) + [5, 6, 7], max_new_tokens=8, priority=0)
+    for _ in range(6):
+        eng.step()
+    assert low.slot is not None and len(low.generated) >= 2
+    high = eng.submit(list(prefix) + [9, 9], max_new_tokens=4, priority=3)
+    for _ in range(2):
+        eng.step()
+    assert low.slot is None, "victim was not preempted"
+    return eng, low, high
+
+
+def _reference_outputs(cfg, model, params, seed=9):
+    ref = _engine(model, params, None, n_slots=2, n_pages=12)
+    prefix = _prefixes(cfg, 1, seed=seed)[0]
+    a = ref.submit(list(prefix) + [5, 6, 7], max_new_tokens=8)
+    b = ref.submit(list(prefix) + [9, 9], max_new_tokens=4)
+    ref.run(400)
+    return a.generated, b.generated
+
+
+def test_preemption_spills_and_resumes_via_recall(qwen):
+    """A preemption moves the victim's whole page chain (prompt +
+    generated, partial last page included) to peers; re-admission recalls
+    it and resumes mid-stream — zero tokens re-prefilled, and the final
+    streams match an unharassed two-slot reference exactly."""
+    cfg, model, params = qwen
+    _, remote = _spill_setup()
+    eng, low, high = _preempt_scenario(cfg, model, params, remote)
+    assert eng.stats["preempt_spills"] == 1
+    assert low.spill_len > 0 and low.resume, \
+        "spill must coexist with the armed re-prefill fallback"
+    assert remote.staged_pages(low.req_id)
+    eng.run(400)
+    assert low.done and high.done
+    assert eng.stats["recall_resumes"] == 1
+    assert eng.stats["resume_fallbacks"] == 0
+    assert eng.stats["recall_resume_prefill_tokens"] == 0
+    ref_low, ref_high = _reference_outputs(cfg, model, params)
+    assert low.generated == ref_low and high.generated == ref_high
+    assert eng.pool.outstanding == 0
+    assert remote.lent == 0                   # every lease came home
+
+
+def test_recall_miss_falls_back_to_reprefill_with_parity(qwen):
+    """Every peer churns away between the preemption-spill and the
+    re-admission: the recall misses, the engine falls back to today's
+    ``resume`` re-prefill — and the streams still match the unharassed
+    reference token for token."""
+    cfg, model, params = qwen
+    reg, remote = _spill_setup()
+    eng, low, high = _preempt_scenario(cfg, model, params, remote)
+    assert low.spill_len > 0
+    for h in ("h1", "h2"):                    # holders take the pages along
+        reg.leave_all(h)
+    eng.run(400)
+    assert low.done and high.done
+    assert eng.stats["recall_resumes"] == 0
+    assert eng.stats["resume_fallbacks"] >= 1
+    assert low.spill_len == 0
+    ref_low, ref_high = _reference_outputs(cfg, model, params)
+    assert low.generated == ref_low and high.generated == ref_high
+    assert eng.pool.outstanding == 0
+    assert remote.lent == 0                   # miss path released the rest
+
+
+def test_preempt_spill_survives_snapshot_restore(qwen):
+    """Snapshot cut while a preempted slot's chain is lent out; restore
+    adopts the group and resumes via recall — same tokens, no leaked or
+    double-freed lease."""
+    cfg, model, params = qwen
+    _, remote = _spill_setup()
+    eng, low, high = _preempt_scenario(cfg, model, params, remote)
+    assert low.spill_len > 0
+    blob = eng.snapshot()
+    eng2 = _engine(model, params, remote, n_slots=1, n_pages=12)
+    eng2.restore(blob)
+    low2 = eng2.requests[low.req_id]
+    high2 = eng2.requests[high.req_id]
+    assert low2.spill_len == low.spill_len
+    assert remote.staged_pages(low.req_id)
+    eng2.run(400)
+    assert low2.done and high2.done
+    assert eng2.stats["recall_resumes"] >= 1
+    ref_low, ref_high = _reference_outputs(cfg, model, params)
+    assert low2.generated == ref_low and high2.generated == ref_high
+    assert eng2.pool.outstanding == 0
+    assert remote.lent == 0
